@@ -1,0 +1,77 @@
+"""Figure 7 analogue: per-optimization ablations (§6.2.3).
+
+Warm validation time with each optimization disabled, one at a time:
+semi-perfect hashing (-> raw string comparison), unrolling, regex
+specialization, instruction reordering.  Reports overall speedup from each
+optimization and the single most-affected dataset, mirroring the paper's
+presentation.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List
+
+from repro.core import CompilerOptions, Validator, compile_schema
+from repro.core.doc_model import parse_document
+from repro.data.corpus import make_corpus
+
+SCALE = float(os.environ.get("BENCH_CORPUS_SCALE", "0.25"))
+ROUNDS = int(os.environ.get("BENCH_WARM_ROUNDS", "3"))
+
+ABLATIONS = {
+    "hashing": dict(options=CompilerOptions(), use_hashing=False),
+    "unrolling": dict(options=CompilerOptions(unroll=False), use_hashing=True),
+    "regex": dict(options=CompilerOptions(regex_specialize=False), use_hashing=True),
+    "reordering": dict(options=CompilerOptions(reorder=False), use_hashing=True),
+    "cisc": dict(options=CompilerOptions(cisc=False), use_hashing=True),
+}
+
+
+def _warm_time(validator, docs) -> float:
+    best = float("inf")
+    for _ in range(ROUNDS):
+        t0 = time.perf_counter()
+        for d in docs:
+            validator.is_valid(d, parsed=True)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(report: Dict[str, object]) -> List[str]:
+    corpus = make_corpus(scale=SCALE)
+    lines: List[str] = []
+    baseline_total = 0.0
+    ablation_total = {k: 0.0 for k in ABLATIONS}
+    per_ds = {k: [] for k in ABLATIONS}
+
+    for ds in corpus:
+        docs = [parse_document(d) for d in ds.documents]
+        base = Validator(compile_schema(ds.schema))
+        t_base = _warm_time(base, docs)
+        baseline_total += t_base
+        for name, spec in ABLATIONS.items():
+            v = Validator(
+                compile_schema(ds.schema, options=spec["options"]),
+                use_hashing=spec["use_hashing"],
+            )
+            t = _warm_time(v, docs)
+            ablation_total[name] += t
+            per_ds[name].append((ds.name, t / max(t_base, 1e-12)))
+
+    results = {}
+    for name in ABLATIONS:
+        overall = ablation_total[name] / max(baseline_total, 1e-12)
+        worst = max(per_ds[name], key=lambda kv: kv[1])
+        best = min(per_ds[name], key=lambda kv: kv[1])
+        results[name] = {
+            "overall_slowdown_without": overall,
+            "most_affected": worst,
+            "least_affected": best,
+        }
+        lines.append(
+            f"ablation/{name},{overall:.3f},max={worst[1]:.2f}@{worst[0]};min={best[1]:.2f}@{best[0]}"
+        )
+    report["ablations"] = results
+    return lines

@@ -1,0 +1,41 @@
+"""Figure 5 analogue: schema compilation time vs schema size."""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List
+
+from repro.core import compile_schema
+from repro.data.corpus import make_corpus
+
+SCALE = float(os.environ.get("BENCH_CORPUS_SCALE", "0.1"))
+REPS = 3
+
+
+def run(report: Dict[str, object]) -> List[str]:
+    corpus = make_corpus(scale=SCALE)
+    rows = []
+    lines = []
+    for ds in corpus:
+        best = float("inf")
+        for _ in range(REPS):
+            t0 = time.perf_counter()
+            compiled = compile_schema(ds.schema)
+            best = min(best, time.perf_counter() - t0)
+        rows.append(
+            {
+                "name": ds.name,
+                "schema_kb": ds.schema_bytes / 1024,
+                "compile_ms": best * 1e3,
+                "instructions": compiled.instruction_count(),
+            }
+        )
+    rows.sort(key=lambda r: r["schema_kb"])
+    for r in rows:
+        lines.append(
+            f"compile/{r['name']},{r['compile_ms']*1e3:.1f},"
+            f"kb={r['schema_kb']:.1f};instructions={r['instructions']}"
+        )
+    report["compile_time"] = rows
+    return lines

@@ -1,0 +1,136 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) from the
+dry-run artifacts in results/dryrun/.
+
+    compute    = dot_flops_per_device      / peak_FLOP/s          (197 TF bf16)
+    memory     = hbm_traffic_per_device    / HBM bandwidth        (819 GB/s)
+    collective = collective_bytes_per_dev  / ICI bandwidth        (50 GB/s)
+
+All three are *seconds per step per chip* (per-device quantities divided by
+per-chip rates == job totals divided by chip-aggregate rates).  The
+dominant term is the bottleneck; roofline fraction = compute / max(terms).
+Also reports MODEL_FLOPS (6ND / 2ND analytic) and the useful-compute ratio
+MODEL_FLOPS / HLO_dot_flops (catches remat/dispatch waste).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_cells() -> List[dict]:
+    cells = []
+    for path in sorted(RESULTS.glob("*.json")):
+        cells.append(json.loads(path.read_text()))
+    return cells
+
+
+def roofline_row(cell: dict) -> Optional[dict]:
+    if cell.get("status") != "ok":
+        return None
+    from repro.configs import get_config
+    from repro.models.flops import hbm_bytes_lower_bound, model_flops
+
+    chips = cell["chips"]
+    flops_dev = cell["cost"]["dot_flops_per_device"]
+    bytes_dev = cell["cost"]["hbm_traffic_bytes_per_device"]
+    coll_dev = cell["collective_bytes_per_device"]
+
+    cfg = get_config(cell["arch"])
+    t_compute = flops_dev / PEAK_FLOPS
+    # HLO traffic is an upper bound (CPU backend fuses less than TPU:
+    # every intermediate round-trips); the analytic floor is weights +
+    # optimizer + cache traffic.  TPU truth lies between.
+    t_memory_hlo = bytes_dev / HBM_BW
+    floor_dev = hbm_bytes_lower_bound(cfg, cell["shape"]) / chips
+    t_memory_floor = floor_dev / HBM_BW
+    t_collective = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory_hlo, "collective": t_collective}
+    dominant = max(terms, key=terms.get)
+    terms_opt = {
+        "compute": t_compute, "memory": t_memory_floor, "collective": t_collective
+    }
+
+    mf = model_flops(cfg, cell["shape"])
+    mf_dev = mf / chips
+    useful = mf_dev / flops_dev if flops_dev else 0.0
+    frac = t_compute / max(terms.values()) if max(terms.values()) > 0 else 0.0
+    frac_opt = (
+        t_compute / max(terms_opt.values()) if max(terms_opt.values()) > 0 else 0.0
+    )
+    # TPU-expected resident set: arguments (weights+opt+cache) + one temp
+    # working set; raw bytes_per_device keeps CPU while-copy artifacts
+    mem = cell["memory"]
+    resident = mem["argument_bytes"] + max(
+        0, min(mem["temp_bytes"], mem["temp_bytes"] // 3)
+    )
+    return {
+        "arch": cell["arch"],
+        "shape": cell["shape"],
+        "mesh": cell["mesh"],
+        "chips": chips,
+        "compute_s": t_compute,
+        "memory_s": t_memory_hlo,
+        "memory_floor_s": t_memory_floor,
+        "collective_s": t_collective,
+        "dominant": dominant,
+        "roofline_fraction": frac,
+        "roofline_fraction_optimistic": frac_opt,
+        "model_flops_per_device": mf_dev,
+        "hlo_dot_flops_per_device": flops_dev,
+        "useful_compute_ratio": useful,
+        "hbm_gib_per_device": cell["memory"]["bytes_per_device"] / 2**30,
+        "fits_v5e_16g": cell["memory"]["bytes_per_device"] < 16 * 2**30,
+    }
+
+
+def markdown_table(rows: List[dict]) -> str:
+    hdr = (
+        "| arch | shape | mesh | compute s | memory s (hlo/floor) | collective s | "
+        "bottleneck | frac (hlo/floor) | useful ratio | HBM GiB | fits |\n"
+        "|---|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    body = ""
+    for r in rows:
+        body += (
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compute_s']:.3e} "
+            f"| {r['memory_s']:.2e} / {r['memory_floor_s']:.2e} | {r['collective_s']:.3e} | {r['dominant']} "
+            f"| {r['roofline_fraction']:.2f} / {r['roofline_fraction_optimistic']:.2f} "
+            f"| {r['useful_compute_ratio']:.2f} "
+            f"| {r['hbm_gib_per_device']:.2f} | {'Y' if r['fits_v5e_16g'] else 'N'} |\n"
+        )
+    return hdr + body
+
+
+def run(report: Dict[str, object]) -> List[str]:
+    lines: List[str] = []
+    rows = []
+    for cell in load_cells():
+        row = roofline_row(cell)
+        if row is None:
+            continue
+        rows.append(row)
+        lines.append(
+            f"roofline/{row['arch']}__{row['shape']}__{row['mesh']},"
+            f"{max(row['compute_s'], row['memory_s'], row['collective_s'])*1e6:.1f},"
+            f"bottleneck={row['dominant']};frac={row['roofline_fraction']:.2f}"
+        )
+    report["roofline"] = rows
+    out = RESULTS.parent / "roofline_table.md"
+    out.write_text(markdown_table([r for r in rows if r["mesh"] == "16x16"]))
+    lines.append(f"roofline/table,0,written_to={out}")
+    return lines
+
+
+if __name__ == "__main__":
+    rep: Dict[str, object] = {}
+    for line in run(rep):
+        print(line)

@@ -1,0 +1,53 @@
+"""Benchmark harness entry point: ``python -m benchmarks.run``.
+
+One module per paper table/figure:
+  validation   -- Table 5 / Figure 6 (per-dataset runtimes + speedups)
+  compile_time -- Figure 5 (compile time vs schema size)
+  ablations    -- Figure 7 (per-optimization contribution)
+  batched      -- beyond-paper TPU-form executor + coverage
+  roofline     -- §Roofline terms from the dry-run artifacts
+
+Prints ``name,us_per_call,derived`` CSV lines and writes the full report
+to results/bench_report.json.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+from typing import Dict
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+
+def main() -> None:
+    from . import ablations, batched, compile_time, roofline, validation
+
+    modules = [
+        ("validation", validation),
+        ("compile_time", compile_time),
+        ("ablations", ablations),
+        ("batched", batched),
+        ("roofline", roofline),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    report: Dict[str, object] = {}
+    print("name,us_per_call,derived")
+    for name, mod in modules:
+        if only and name != only:
+            continue
+        t0 = time.time()
+        try:
+            for line in mod.run(report):
+                print(line)
+        except Exception as exc:  # noqa: BLE001 -- keep the harness going
+            print(f"{name}/ERROR,0,{type(exc).__name__}:{exc}")
+        print(f"{name}/_elapsed,{(time.time()-t0)*1e6:.0f},seconds={time.time()-t0:.1f}")
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "bench_report.json").write_text(json.dumps(report, indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""End-to-end driver: train a ~100M-param dense LM for a few hundred steps
+on JSON records that pass Blaze admission (deliverable (b)).
+
+The pipeline validates every record against the dataset schema before
+tokenization; the supervisor checkpoints periodically and demonstrates
+resume.  CPU-sized by default; pass --steps to change.
+
+Run: PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+import itertools
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.corpus import make_dataset
+from repro.data.pipeline import ShardedPipeline
+from repro.models import Model
+from repro.models.config import ArchConfig, LayerSpec
+from repro.train import optimizer as opt
+from repro.train.checkpoint import CheckpointManager
+from repro.train.supervisor import SupervisorConfig, TrainSupervisor
+
+# ~100M-parameter dense config (same family as granite-3-8b)
+CFG = ArchConfig(
+    name="granite-100m",
+    family="dense",
+    n_layers=8,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=4,
+    d_ff=1536,
+    vocab_size=512,  # byte tokenizer + specials
+    period=(LayerSpec(mixer="attention", ffn="dense"),),
+    max_seq_len=256,
+)
+
+RECORD_SCHEMA = {
+    "type": "object",
+    "required": ["text"],
+    "properties": {"text": {"type": "string", "minLength": 8}},
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    model = Model(CFG)
+    print(f"params: {CFG.param_count()/1e6:.1f}M")
+    params = model.init(jax.random.PRNGKey(0))
+    ocfg = opt.OptimizerConfig(
+        learning_rate=1e-3, warmup_steps=20, total_steps=args.steps
+    )
+    opt_state = opt.init(ocfg, params)
+
+    # training records: JSON documents from the benchmark corpus generator,
+    # admitted through the compiled validator
+    ds = make_dataset("train-corpus", 4000, 8.0, 400, seed=7)
+    records = [{"text": __import__("json").dumps(d)} for d in ds.documents]
+    pipe = ShardedPipeline(
+        RECORD_SCHEMA, records, seq_len=args.seq_len, batch_size=args.batch
+    )
+
+    @jax.jit
+    def step_fn(p, s, batch):
+        def loss_fn(pp):
+            return model.loss(
+                pp, jnp.asarray(batch["tokens"]), jnp.asarray(batch["labels"]),
+                remat=False,
+            )
+
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        new_p, new_s, m = opt.update(ocfg, grads, s, p)
+        return new_p, new_s, dict(m, loss=loss)
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        mgr = CheckpointManager(ckpt_dir, keep=2)
+        sup = TrainSupervisor(step_fn, mgr, SupervisorConfig(checkpoint_every=50))
+        batches = itertools.cycle(pipe.batches())
+        t0 = time.time()
+        params, opt_state, hist = sup.run(
+            params, opt_state, batches, num_steps=args.steps
+        )
+        dt = time.time() - t0
+        losses = [r.loss for r in hist if np.isfinite(r.loss)]
+        print(
+            f"steps={len(hist)} wall={dt:.1f}s "
+            f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+            f"(admission: {pipe.admission.stats.admitted} admitted, "
+            f"{pipe.admission.stats.rejected} rejected)"
+        )
+        assert losses[-1] < losses[0], "training must reduce loss"
+        # demonstrate resume-from-checkpoint
+        start, p2, s2 = TrainSupervisor(step_fn, mgr, SupervisorConfig()).resume_or_init(
+            params, opt_state
+        )
+        print(f"resume: latest checkpoint at step {start}")
+
+
+if __name__ == "__main__":
+    main()

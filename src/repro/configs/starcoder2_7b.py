@@ -1,0 +1,21 @@
+"""starcoder2-7b [dense]: GQA + RoPE code model.
+
+32L d_model=4608 36H (GQA kv=4) d_ff=18432 vocab=49152
+[arXiv:2402.19173; hf].
+"""
+
+from ..models.config import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="starcoder2-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4608,
+    n_heads=36,
+    n_kv_heads=4,
+    d_ff=18432,
+    vocab_size=49152,
+    period=(LayerSpec(mixer="attention", ffn="dense"),),
+    supports_long_context=False,
+    max_seq_len=32768,
+)

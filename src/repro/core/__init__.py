@@ -1,0 +1,23 @@
+"""Blaze core: JSON Schema -> validation DSL compiler + executors.
+
+The paper's primary contribution: schema compilation (compiler.py),
+the validation DSL (instructions.py), the sequential fail-fast executor
+(executor.py), and the TPU-native tensorised form (tape.py +
+batch_executor.py).
+"""
+
+from .compiler import CompiledSchema, CompilerOptions, compile_schema
+from .executor import Validator
+from .interpreter import NaiveValidator
+from .doc_model import parse_document
+from .schema_resolver import Dialect
+
+__all__ = [
+    "CompiledSchema",
+    "CompilerOptions",
+    "compile_schema",
+    "Validator",
+    "NaiveValidator",
+    "parse_document",
+    "Dialect",
+]

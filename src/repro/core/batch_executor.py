@@ -1,0 +1,248 @@
+"""Batched, TPU-native schema validation over token tables.
+
+Validates B documents against one compiled location tape in a handful of
+large tensor ops:
+
+1. **Location propagation** -- BFS-level loop (static, ``max_depth``
+   iterations): every node's schema location derives from its parent's via
+   the property-transition table (``hash_match`` kernel) or the
+   item/prefix rules.  Unmatched properties map to the location's
+   additionalProperties location, ``UNTRACKED`` (no constraints below) or
+   ``INVALID`` (closed object).
+2. **Required tracking** -- matched children scatter their required-slot
+   bit into the parent's acquired mask; objects then check
+   ``acquired & required == required``.
+3. **Assertion evaluation** -- the ``assertion_eval`` kernel computes the
+   (nodes x rows) pass matrix; ownership masking and enum OR-group
+   reduction are fused selects around it.
+4. **Reduce** -- AND over nodes per document.
+
+The per-document fail-fast of the sequential engine becomes batch-level
+work (§2.3 short-circuiting has no analogue across a converged batch); the
+compile-time *reordering* optimizations still apply because they shrink
+the tape itself.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.tape import LOC_INVALID, LOC_UNTRACKED, LocationTape
+from ..kernels import ops as kops
+
+__all__ = ["BatchValidator"]
+
+_T_OBJ = 6
+_T_ARR = 5
+
+
+def _tape_consts(tape: LocationTape) -> Dict[str, jnp.ndarray]:
+    return {
+        "prop_owner": jnp.asarray(tape.prop_owner),
+        "prop_hash": jnp.asarray(tape.prop_hash),
+        "prop_child_loc": jnp.asarray(tape.prop_child_loc),
+        "prop_required_slot": jnp.asarray(tape.prop_required_slot),
+        "loc_closed": jnp.asarray(tape.loc_closed),
+        "loc_addl": jnp.asarray(tape.loc_addl),
+        "loc_item": jnp.asarray(tape.loc_item),
+        "loc_item_start": jnp.asarray(tape.loc_item_start),
+        "loc_prefix_start": jnp.asarray(tape.loc_prefix_start),
+        "loc_prefix_len": jnp.asarray(tape.loc_prefix_len),
+        "prefix_loc": jnp.asarray(tape.prefix_loc),
+        "loc_required_mask": jnp.asarray(tape.loc_required_mask.astype(np.int32)),
+        "asrt_owner": jnp.asarray(tape.asrt_owner),
+        "asrt_op": jnp.asarray(tape.asrt_op),
+        "asrt_group": jnp.asarray(tape.asrt_group),
+        "asrt_f0": jnp.asarray(tape.asrt_f0.astype(np.float32)),
+        "asrt_i0": jnp.asarray(tape.asrt_i0),
+        "asrt_i1": jnp.asarray(tape.asrt_i1),
+        "asrt_u0": jnp.asarray(tape.asrt_u0),
+        "asrt_u1": jnp.asarray(tape.asrt_u1),
+        "asrt_hash": jnp.asarray(tape.asrt_hash),
+    }
+
+
+class BatchValidator:
+    """Validates encoded token-table batches against one schema tape."""
+
+    def __init__(
+        self,
+        tape: LocationTape,
+        *,
+        max_depth: int = 16,
+        use_pallas: bool = True,
+    ):
+        self.tape = tape
+        self.max_depth = max_depth
+        self.use_pallas = use_pallas
+        self._consts = _tape_consts(tape)
+        self._fn = jax.jit(
+            functools.partial(
+                _validate_batch,
+                consts=self._consts,
+                max_depth=max_depth,
+                use_pallas=use_pallas,
+            )
+        )
+
+    def validate(self, table) -> Tuple[np.ndarray, np.ndarray]:
+        """Returns (valid, decided) boolean arrays of shape (B,).
+
+        ``decided=False`` rows exceeded the encoder budget and must be
+        routed to the sequential executor.
+        """
+        cols = {k: jnp.asarray(v) for k, v in table.columns().items()}
+        valid = self._fn(cols)
+        return np.asarray(valid), np.asarray(table.ok)
+
+
+def _validate_batch(cols, *, consts, max_depth: int, use_pallas: bool):
+    B, N = cols["node_type"].shape
+    flat = lambda x: x.reshape((B * N,) + x.shape[2:])
+
+    node_type = flat(cols["node_type"]).astype(jnp.int32)
+    parent = flat(cols["parent"])  # int32, -1 root
+    depth = flat(cols["depth"])
+    idx_in_parent = flat(cols["idx_in_parent"])
+    key_hash = flat(cols["key_hash"])
+    size = flat(cols["size"])
+
+    doc_base = jnp.repeat(jnp.arange(B, dtype=jnp.int32) * N, N)
+    parent_flat = jnp.where(parent >= 0, doc_base + parent, 0)
+
+    is_pad = node_type == 0
+
+    # ---- 1. location propagation -------------------------------------------
+    loc = jnp.where(
+        jnp.arange(B * N, dtype=jnp.int32) % N == 0,
+        jnp.int32(0),
+        jnp.int32(-1),
+    )
+    acquired = jnp.zeros(B * N, jnp.int32)  # required-slot bits per object
+
+    for d in range(1, max_depth + 1):
+        at_depth = (depth == d) & ~is_pad & (parent >= 0)
+        parent_loc = loc[parent_flat]
+        parent_type = node_type[parent_flat]
+
+        # -- object members: property-table match (hash_match kernel)
+        is_member = at_depth & (parent_type == _T_OBJ)
+        q_owner = jnp.where(is_member & (parent_loc >= 0), parent_loc, jnp.int32(-1))
+        row = kops.hash_match(
+            key_hash,
+            q_owner,
+            consts["prop_hash"],
+            consts["prop_owner"],
+            use_pallas=use_pallas,
+        )
+        matched = row >= 0
+        safe_row = jnp.where(matched, row, 0)
+        child_loc = jnp.where(
+            matched, consts["prop_child_loc"][safe_row], jnp.int32(LOC_UNTRACKED)
+        )
+        # unmatched at a tracked object location: addl / closed / untracked
+        p_loc_safe = jnp.where(parent_loc >= 0, parent_loc, 0)
+        addl = consts["loc_addl"][p_loc_safe]
+        closed = consts["loc_closed"][p_loc_safe]
+        unmatched_loc = jnp.where(
+            closed,
+            jnp.int32(LOC_INVALID),
+            jnp.where(addl >= 0, addl, jnp.int32(LOC_UNTRACKED)),
+        )
+        member_loc = jnp.where(matched, child_loc, unmatched_loc)
+        member_loc = jnp.where(parent_loc >= 0, member_loc, parent_loc)
+
+        # required bit scatter into the parent's acquired mask
+        slot = jnp.where(matched, consts["prop_required_slot"][safe_row], -1)
+        contrib = jnp.where(
+            is_member & (slot >= 0),
+            jnp.left_shift(jnp.int32(1), jnp.maximum(slot, 0)),
+            0,
+        )
+        acquired = acquired.at[parent_flat].add(
+            jnp.where(is_member, contrib, 0), mode="drop"
+        )
+
+        # -- array items: prefix / tail-items rules
+        is_item = at_depth & (parent_type == _T_ARR)
+        pfx_len = consts["loc_prefix_len"][p_loc_safe]
+        pfx_start = consts["loc_prefix_start"][p_loc_safe]
+        in_prefix = idx_in_parent < pfx_len
+        pfx_idx = jnp.clip(pfx_start + idx_in_parent, 0, consts["prefix_loc"].shape[0] - 1)
+        prefix_loc = consts["prefix_loc"][pfx_idx]
+        item_loc = consts["loc_item"][p_loc_safe]
+        item_start = consts["loc_item_start"][p_loc_safe]
+        tail_loc = jnp.where(
+            (item_loc >= 0) & (idx_in_parent >= item_start),
+            item_loc,
+            jnp.int32(LOC_UNTRACKED),
+        )
+        arr_loc = jnp.where(in_prefix, prefix_loc, tail_loc)
+        arr_loc = jnp.where(parent_loc >= 0, arr_loc, parent_loc)
+
+        new_loc = jnp.where(is_member, member_loc, jnp.where(is_item, arr_loc, loc))
+        loc = jnp.where(at_depth, new_loc, loc)
+
+    tracked = loc >= 0
+
+    # ---- 2. required properties ----------------------------------------------
+    loc_safe = jnp.where(tracked, loc, 0)
+    required_mask = jnp.where(
+        tracked & (node_type == _T_OBJ), consts["loc_required_mask"][loc_safe], 0
+    )
+    required_ok = (acquired & required_mask) == required_mask
+
+    # ---- 3. assertion rows ------------------------------------------------------
+    node_cols = {
+        "type": node_type,
+        "is_int": flat(cols["is_int"]),
+        "num": flat(cols["num"]).astype(jnp.float32),
+        "size": size,
+        "str_hash": flat(cols["str_hash"]),
+        "str_prefix": flat(cols["str_prefix"]),
+    }
+    asrt_cols = {
+        "op": consts["asrt_op"],
+        "f0": consts["asrt_f0"],
+        "i0": consts["asrt_i0"],
+        "i1": consts["asrt_i1"],
+        "u0": consts["asrt_u0"],
+        "u1": consts["asrt_u1"],
+        "hash": consts["asrt_hash"],
+    }
+    passes = kops.assertion_eval(node_cols, asrt_cols, use_pallas=use_pallas).astype(
+        bool
+    )  # (B*N, A)
+    applies = loc[:, None] == consts["asrt_owner"][None, :]  # (B*N, A)
+
+    is_and_row = consts["asrt_group"] == 0
+    and_ok = jnp.all(jnp.where(applies & is_and_row[None, :], passes, True), axis=1)
+
+    # enum OR-groups: group passes iff it does not apply or any row matches
+    groups = consts["asrt_group"]
+    n_groups = int(self_max(groups)) + 1
+    if n_groups > 1:
+        onehot = (
+            groups[None, :, None] == jnp.arange(1, n_groups, dtype=jnp.int32)[None, None, :]
+        )  # (1, A, G-1)
+        gm = jnp.any((applies & passes)[:, :, None] & onehot, axis=1)  # (B*N, G-1)
+        ga = jnp.any(applies[:, :, None] & onehot, axis=1)
+        or_ok = jnp.all(jnp.logical_or(~ga, gm), axis=1)
+    else:
+        or_ok = jnp.ones(B * N, bool)
+
+    # ---- 4. reduce ---------------------------------------------------------------
+    node_valid = (
+        (loc != LOC_INVALID) & and_ok & or_ok & required_ok
+    ) | is_pad
+    return jnp.all(node_valid.reshape(B, N), axis=1)
+
+
+def self_max(x: jnp.ndarray) -> int:
+    """Static max of a tape-constant array (tape is host data)."""
+    return int(np.asarray(x).max())

@@ -1,0 +1,582 @@
+"""Instruction DSL -> tensorised *location tape* (the TPU-native schema form).
+
+The sequential executor walks instructions per document.  The batched
+executor instead assigns every document node a **schema location id** by
+propagating locations down the BFS-ordered token table (property matching =
+the ``hash_match`` kernel), then evaluates a flat table of per-location
+assertion rows over all nodes at once (the ``assertion_eval`` kernel).
+
+The tape supports the *structural subset* of the DSL that dominates API
+payload validation: types, numeric/string/array/object bounds, specialized
+regexes, scalar const/enum, required, (closed) properties, nested
+objects/arrays, prefixItems/items.  Instructions outside the subset raise
+:class:`UnsupportedForBatch`, and callers fall back to the sequential
+executor -- the classic fast-path/slow-path split.  Coverage over the
+benchmark corpus is reported in EXPERIMENTS.md.
+
+Assertion-row mini-ISA (column ``asrt_op``):
+
+====  ==============  =======================================================
+code  name            semantics (precondition in parentheses)
+====  ==============  =======================================================
+0     TYPE_MASK       node type in bitmask i0; i1=1 -> numbers must be ints
+1     NUM_GE          (number)  num >= f0
+2     NUM_GT          (number)  num >  f0
+3     NUM_LE          (number)  num <= f0
+4     NUM_LT          (number)  num <  f0
+5     NUM_MULTIPLE    (number)  num divisible by f0
+6     STR_MINLEN      (string)  size >= i0
+7     STR_MAXLEN      (string)  size <= i0
+8     ARR_MINLEN      (array)   size >= i0
+9     ARR_MAXLEN      (array)   size <= i0
+10    OBJ_MINPROPS    (object)  size >= i0
+11    OBJ_MAXPROPS    (object)  size <= i0
+12    STR_PREFIX      (string)  first i0 (<=8) bytes equal u0,u1
+13    STR_EQ          exact string equality via hash lanes
+14    CONST_NULL      value is null
+15    CONST_BOOL      value is boolean f0
+16    CONST_NUM       value is number f0
+17    STR_EQ_PRE      (string)  equality via hash lanes (skip non-strings)
+====  ==============  =======================================================
+
+Rows sharing a nonzero ``asrt_group`` form an OR-group (``enum``); rows with
+group 0 are ANDed individually with precondition semantics.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .compiler import CompiledSchema
+from .instructions import Instruction, Instructions, OpCode
+from .regex_opt import RegexKind
+
+__all__ = ["LocationTape", "UnsupportedForBatch", "build_tape", "try_build_tape", "AOP"]
+
+
+class UnsupportedForBatch(ValueError):
+    """Schema uses DSL features outside the tensorised subset."""
+
+
+# assertion op codes (mini-ISA)
+class AOP:
+    TYPE_MASK = 0
+    NUM_GE = 1
+    NUM_GT = 2
+    NUM_LE = 3
+    NUM_LT = 4
+    NUM_MULTIPLE = 5
+    STR_MINLEN = 6
+    STR_MAXLEN = 7
+    ARR_MINLEN = 8
+    ARR_MAXLEN = 9
+    OBJ_MINPROPS = 10
+    OBJ_MAXPROPS = 11
+    STR_PREFIX = 12
+    STR_EQ = 13
+    CONST_NULL = 14
+    CONST_BOOL = 15
+    CONST_NUM = 16
+    STR_EQ_PRE = 17
+
+
+# special location ids
+LOC_UNTRACKED = -2  # no constraints below this point
+LOC_INVALID = -3  # reaching this location fails the document
+
+# type code bits (mirrors data.doc_table.TYPE_CODES)
+_TYPE_BIT = {
+    "null": 1 << 1,
+    "boolean": 1 << 2,
+    "number": 1 << 3,
+    "string": 1 << 4,
+    "array": 1 << 5,
+    "object": 1 << 6,
+}
+
+
+@dataclass
+class _Loc:
+    """Mutable per-location build state."""
+
+    index: int
+    props: Dict[str, int] = field(default_factory=dict)  # key -> prop row
+    closed: bool = False
+    addl_loc: int = -1  # location for unmatched properties (-1: none)
+    item_loc: int = -1
+    item_start: int = 0
+    prefix_locs: List[int] = field(default_factory=list)
+    required_slots: Dict[str, int] = field(default_factory=dict)
+
+
+@dataclass
+class LocationTape:
+    """Flat tensor form of a compiled (structural-subset) schema."""
+
+    n_locations: int
+    # property transition rows
+    prop_owner: np.ndarray  # int32 (M,)
+    prop_hash: np.ndarray  # uint32 (M, 8)
+    prop_child_loc: np.ndarray  # int32 (M,)
+    prop_required_slot: np.ndarray  # int32 (M,)  -1 = not required
+    # per-location
+    loc_closed: np.ndarray  # bool (L,)
+    loc_addl: np.ndarray  # int32 (L,)  unmatched-property location / -1
+    loc_item: np.ndarray  # int32 (L,)
+    loc_item_start: np.ndarray  # int32 (L,)
+    loc_prefix_start: np.ndarray  # int32 (L,)
+    loc_prefix_len: np.ndarray  # int32 (L,)
+    prefix_loc: np.ndarray  # int32 (P,)
+    loc_required_mask: np.ndarray  # uint32 (L,)
+    # assertion rows
+    asrt_owner: np.ndarray  # int32 (A,)
+    asrt_op: np.ndarray  # int32 (A,)
+    asrt_group: np.ndarray  # int32 (A,)  0 = AND row, else OR-group id
+    asrt_f0: np.ndarray  # float64 (A,)
+    asrt_i0: np.ndarray  # int32 (A,)
+    asrt_i1: np.ndarray  # int32 (A,)
+    asrt_u0: np.ndarray  # uint32 (A,)
+    asrt_u1: np.ndarray  # uint32 (A,)
+    asrt_hash: np.ndarray  # uint32 (A, 8)
+
+    @property
+    def n_props(self) -> int:
+        return len(self.prop_owner)
+
+    @property
+    def n_assertions(self) -> int:
+        return len(self.asrt_owner)
+
+
+class _TapeBuilder:
+    def __init__(self) -> None:
+        self.locs: List[_Loc] = []
+        self.prop_rows: List[Tuple[int, np.ndarray, int, int]] = []
+        self.asrt_rows: List[dict] = []
+        self._group_counter = 0
+
+    # -- locations -----------------------------------------------------
+
+    def new_loc(self) -> _Loc:
+        loc = _Loc(index=len(self.locs))
+        self.locs.append(loc)
+        return loc
+
+    def child_for_key(self, loc: _Loc, key: str) -> _Loc:
+        if key in loc.props:
+            row = loc.props[key]
+            child_idx = self.prop_rows[row][2]
+            if child_idx >= 0:
+                return self.locs[child_idx]
+            # upgrade an untracked (required-only) row to a real location
+            child = self.new_loc()
+            owner, lanes, _, slot = self.prop_rows[row]
+            self.prop_rows[row] = (owner, lanes, child.index, slot)
+            return child
+        from ..data.doc_table import key_lanes
+
+        child = self.new_loc()
+        row = len(self.prop_rows)
+        self.prop_rows.append((loc.index, key_lanes(key), child.index, -1))
+        loc.props[key] = row
+        return child
+
+    def require_key(self, loc: _Loc, key: str) -> None:
+        if key in loc.required_slots:
+            return
+        slot = len(loc.required_slots)
+        if slot >= 32:
+            raise UnsupportedForBatch(">32 required properties at one location")
+        loc.required_slots[key] = slot
+        if key in loc.props:
+            row = loc.props[key]
+            owner, lanes, child, _ = self.prop_rows[row]
+            self.prop_rows[row] = (owner, lanes, child, slot)
+        else:
+            from ..data.doc_table import key_lanes
+
+            row = len(self.prop_rows)
+            self.prop_rows.append((loc.index, key_lanes(key), LOC_UNTRACKED, slot))
+            loc.props[key] = row
+
+    # -- assertion rows ---------------------------------------------------
+
+    def row(self, loc: _Loc, op: int, *, f0=0.0, i0=0, i1=0, u0=0, u1=0, lanes=None, group=0):
+        self.asrt_rows.append(
+            dict(
+                owner=loc.index,
+                op=op,
+                group=group,
+                f0=float(f0),
+                i0=int(i0),
+                i1=int(i1),
+                u0=int(u0),
+                u1=int(u1),
+                lanes=np.zeros(8, np.uint32) if lanes is None else lanes,
+            )
+        )
+
+    def next_group(self) -> int:
+        self._group_counter += 1
+        return self._group_counter
+
+    # -- instruction lowering -----------------------------------------------
+
+    def add_group(self, instructions: Instructions, loc: _Loc) -> None:
+        for inst in instructions:
+            self.add(inst, loc)
+
+    def descend(self, loc: _Loc, rel_path) -> _Loc:
+        for tok in rel_path:
+            if not isinstance(tok, str):
+                raise UnsupportedForBatch("integer instance paths not batchable")
+            loc = self.child_for_key(loc, tok)
+        return loc
+
+    def add(self, inst: Instruction, loc: _Loc) -> None:
+        target = self.descend(loc, inst.rel_path)
+        op = inst.op
+        handler = _HANDLERS.get(op)
+        if handler is None:
+            raise UnsupportedForBatch(f"instruction {op.name} not batchable")
+        handler(self, inst, target)
+
+    # -- finalize ------------------------------------------------------------
+
+    def build(self) -> LocationTape:
+        L = len(self.locs)
+        prefix_loc: List[int] = []
+        loc_prefix_start = np.zeros(L, np.int32)
+        loc_prefix_len = np.zeros(L, np.int32)
+        for loc in self.locs:
+            loc_prefix_start[loc.index] = len(prefix_loc)
+            loc_prefix_len[loc.index] = len(loc.prefix_locs)
+            prefix_loc.extend(loc.prefix_locs)
+        M = max(1, len(self.prop_rows))
+        prop_owner = np.full(M, -1, np.int32)
+        prop_hash = np.zeros((M, 8), np.uint32)
+        prop_child = np.full(M, LOC_UNTRACKED, np.int32)
+        prop_slot = np.full(M, -1, np.int32)
+        for r, (owner, lanes, child, slot) in enumerate(self.prop_rows):
+            prop_owner[r] = owner
+            prop_hash[r] = lanes
+            prop_child[r] = child
+            prop_slot[r] = slot
+        A = max(1, len(self.asrt_rows))
+        tape = LocationTape(
+            n_locations=L,
+            prop_owner=prop_owner,
+            prop_hash=prop_hash,
+            prop_child_loc=prop_child,
+            prop_required_slot=prop_slot,
+            loc_closed=np.array([l.closed for l in self.locs] or [False], bool),
+            loc_addl=np.array([l.addl_loc for l in self.locs] or [-1], np.int32),
+            loc_item=np.array([l.item_loc for l in self.locs] or [-1], np.int32),
+            loc_item_start=np.array([l.item_start for l in self.locs] or [0], np.int32),
+            loc_prefix_start=loc_prefix_start if L else np.zeros(1, np.int32),
+            loc_prefix_len=loc_prefix_len if L else np.zeros(1, np.int32),
+            prefix_loc=np.array(prefix_loc or [-1], np.int32),
+            loc_required_mask=np.array(
+                [
+                    sum(1 << s for s in l.required_slots.values())
+                    for l in self.locs
+                ]
+                or [0],
+                np.uint32,
+            ),
+            asrt_owner=np.array([r["owner"] for r in self.asrt_rows] or [-1], np.int32),
+            asrt_op=np.array([r["op"] for r in self.asrt_rows] or [0], np.int32),
+            asrt_group=np.array([r["group"] for r in self.asrt_rows] or [0], np.int32),
+            asrt_f0=np.array([r["f0"] for r in self.asrt_rows] or [0.0], np.float64),
+            asrt_i0=np.array([r["i0"] for r in self.asrt_rows] or [0], np.int32),
+            asrt_i1=np.array([r["i1"] for r in self.asrt_rows] or [0], np.int32),
+            asrt_u0=np.array([r["u0"] for r in self.asrt_rows] or [0], np.uint32),
+            asrt_u1=np.array([r["u1"] for r in self.asrt_rows] or [0], np.uint32),
+            asrt_hash=np.stack([r["lanes"] for r in self.asrt_rows] or [np.zeros(8, np.uint32)]),
+        )
+        return tape
+
+
+# ---------------------------------------------------------------------------
+# Per-instruction lowering handlers
+# ---------------------------------------------------------------------------
+
+
+def _type_row(b: _TapeBuilder, loc: _Loc, types: Tuple[str, ...]) -> None:
+    mask = 0
+    for t in types:
+        if t == "integer":
+            mask |= _TYPE_BIT["number"]
+        else:
+            mask |= _TYPE_BIT[t]
+    ints_only = "integer" in types and "number" not in types
+    b.row(loc, AOP.TYPE_MASK, i0=mask, i1=1 if ints_only else 0)
+
+
+def _h_type(b, inst, loc):
+    _type_row(b, loc, (inst.type,))
+
+
+def _h_type_any(b, inst, loc):
+    _type_row(b, loc, inst.types)
+
+
+def _scalar_const_row(b: _TapeBuilder, loc: _Loc, value: Any, group: int) -> None:
+    from ..data.doc_table import key_lanes
+
+    if value is None:
+        b.row(loc, AOP.CONST_NULL, group=group)
+    elif isinstance(value, bool):
+        b.row(loc, AOP.CONST_BOOL, f0=1.0 if value else 0.0, group=group)
+    elif isinstance(value, (int, float)):
+        b.row(loc, AOP.CONST_NUM, f0=float(value), group=group)
+    elif isinstance(value, str):
+        b.row(loc, AOP.STR_EQ, lanes=key_lanes(value), group=group)
+    else:
+        raise UnsupportedForBatch("const/enum of arrays/objects not batchable")
+
+
+def _h_equal(b, inst, loc):
+    group = b.next_group()
+    _scalar_const_row(b, loc, inst.value, group)
+
+
+def _h_equals_any(b, inst, loc):
+    group = b.next_group()
+    for v in inst.values:
+        _scalar_const_row(b, loc, v, group)
+
+
+def _h_fail(b, inst, loc):
+    # an impossible assertion: type in empty mask
+    b.row(loc, AOP.TYPE_MASK, i0=0)
+
+
+def _h_number(b, inst, loc):
+    op = inst.op
+    if op is OpCode.GREATER:
+        b.row(loc, AOP.NUM_GT, f0=inst.bound)
+    elif op is OpCode.GREATER_EQUAL:
+        b.row(loc, AOP.NUM_GE, f0=inst.bound)
+    elif op is OpCode.LESS:
+        b.row(loc, AOP.NUM_LT, f0=inst.bound)
+    elif op is OpCode.LESS_EQUAL:
+        b.row(loc, AOP.NUM_LE, f0=inst.bound)
+    elif op is OpCode.DIVISIBLE:
+        b.row(loc, AOP.NUM_MULTIPLE, f0=inst.divisor)
+    elif op is OpCode.NUMBER_BOUNDS:
+        if inst.lo is not None:
+            b.row(loc, AOP.NUM_GT if inst.lo_exclusive else AOP.NUM_GE, f0=inst.lo)
+        if inst.hi is not None:
+            b.row(loc, AOP.NUM_LT if inst.hi_exclusive else AOP.NUM_LE, f0=inst.hi)
+
+
+def _h_string_size(b, inst, loc):
+    if inst.op is OpCode.STRING_SIZE_GREATER:
+        b.row(loc, AOP.STR_MINLEN, i0=inst.bound)
+    else:
+        b.row(loc, AOP.STR_MAXLEN, i0=inst.bound)
+
+
+def _h_string_bounds(b, inst, loc):
+    b.row(loc, AOP.STR_MINLEN, i0=inst.min_len)
+    if inst.max_len is not None:
+        b.row(loc, AOP.STR_MAXLEN, i0=inst.max_len)
+
+
+def _h_regex(b, inst, loc):
+    plan = inst.plan
+    if plan.kind is RegexKind.ALL:
+        return
+    if plan.kind is RegexKind.NON_EMPTY:
+        b.row(loc, AOP.STR_MINLEN, i0=1)
+        return
+    if plan.kind is RegexKind.LENGTH_RANGE:
+        b.row(loc, AOP.STR_MINLEN, i0=plan.min_len)
+        if plan.max_len is not None:
+            b.row(loc, AOP.STR_MAXLEN, i0=plan.max_len)
+        return
+    if plan.kind is RegexKind.EXACT:
+        from ..data.doc_table import key_lanes
+
+        # preconditioned form: non-strings skip (pattern semantics)
+        b.row(loc, AOP.STR_EQ_PRE, lanes=key_lanes(plan.literal))
+        return
+    if plan.kind is RegexKind.PREFIX:
+        data = plan.literal.encode("utf-8")
+        if len(data) > 8:
+            raise UnsupportedForBatch("prefix >8 bytes not batchable")
+        padded = data.ljust(8, b"\x00")
+        b.row(
+            loc,
+            AOP.STR_PREFIX,
+            i0=len(data),
+            u0=int.from_bytes(padded[:4], "big"),
+            u1=int.from_bytes(padded[4:], "big"),
+        )
+        return
+    raise UnsupportedForBatch(f"regex kind {plan.kind} not batchable")
+
+
+def _h_array_size(b, inst, loc):
+    if inst.op is OpCode.ARRAY_SIZE_GREATER:
+        b.row(loc, AOP.ARR_MINLEN, i0=inst.bound)
+    else:
+        b.row(loc, AOP.ARR_MAXLEN, i0=inst.bound)
+
+
+def _h_array_bounds(b, inst, loc):
+    b.row(loc, AOP.ARR_MINLEN, i0=inst.min_len)
+    if inst.max_len is not None:
+        b.row(loc, AOP.ARR_MAXLEN, i0=inst.max_len)
+
+
+def _h_object_size(b, inst, loc):
+    if inst.op is OpCode.OBJECT_SIZE_GREATER:
+        b.row(loc, AOP.OBJ_MINPROPS, i0=inst.bound)
+    else:
+        b.row(loc, AOP.OBJ_MAXPROPS, i0=inst.bound)
+
+
+def _h_defines(b, inst, loc):
+    b.require_key(loc, inst.key)
+
+
+def _h_defines_all(b, inst, loc):
+    for key in inst.keys:
+        b.require_key(loc, key)
+
+
+def _h_property_type(b, inst, loc):
+    b.require_key(loc, inst.key)
+    child = b.child_for_key(loc, inst.key)
+    _type_row(b, child, (inst.type,))
+
+
+def _h_loop_properties_match(b, inst, loc, closed=False):
+    if closed and getattr(inst, "tolerate_patterns", ()):  # patterns need key text
+        for p in inst.tolerate_patterns:
+            raise UnsupportedForBatch("patternProperties tolerance not batchable")
+    for key, _h, group in inst.matches:
+        child = b.child_for_key(loc, key)
+        b.add_group(group, child)
+    if closed:
+        loc.closed = True
+
+
+def _h_loop_properties_match_closed(b, inst, loc):
+    _h_loop_properties_match(b, inst, loc, closed=True)
+
+
+def _h_loop_properties(b, inst, loc):
+    # every property validates against children: model as the addl location
+    if loc.addl_loc >= 0:
+        addl = b.locs[loc.addl_loc]
+    else:
+        addl = b.new_loc()
+        loc.addl_loc = addl.index
+    b.add_group(inst.children, addl)
+
+
+def _h_loop_properties_except(b, inst, loc):
+    if inst.exclude_patterns:
+        raise UnsupportedForBatch("patternProperties exclusion not batchable")
+    # excluded keys must exist as prop rows so unmatched -> addl
+    for key in inst.exclude_keys:
+        b.child_for_key(loc, key)
+    addl = b.new_loc()
+    if loc.addl_loc >= 0:
+        raise UnsupportedForBatch("multiple additionalProperties scopes")
+    loc.addl_loc = addl.index
+    b.add_group(inst.children, addl)
+
+
+def _h_loop_items(b, inst, loc):
+    if loc.item_loc >= 0:
+        item = b.locs[loc.item_loc]
+    else:
+        item = b.new_loc()
+        loc.item_loc = item.index
+        loc.item_start = 0
+    b.add_group(inst.children, item)
+
+
+def _h_loop_items_from(b, inst, loc):
+    if loc.item_loc >= 0:
+        raise UnsupportedForBatch("conflicting items scopes")
+    item = b.new_loc()
+    loc.item_loc = item.index
+    loc.item_start = inst.start
+    b.add_group(inst.children, item)
+
+
+def _h_array_prefix(b, inst, loc):
+    if loc.prefix_locs:
+        raise UnsupportedForBatch("conflicting prefixItems scopes")
+    for group in inst.groups:
+        child = b.new_loc()
+        loc.prefix_locs.append(child.index)
+        b.add_group(group, child)
+
+
+def _h_control_label(b, inst, loc):
+    # non-recursive shared definitions: expand the children in place
+    b.add_group(inst.children, loc)
+
+
+_HANDLERS = {
+    OpCode.FAIL: _h_fail,
+    OpCode.TYPE: _h_type,
+    OpCode.TYPE_ANY: _h_type_any,
+    OpCode.EQUAL: _h_equal,
+    OpCode.EQUALS_ANY: _h_equals_any,
+    OpCode.GREATER: _h_number,
+    OpCode.GREATER_EQUAL: _h_number,
+    OpCode.LESS: _h_number,
+    OpCode.LESS_EQUAL: _h_number,
+    OpCode.NUMBER_BOUNDS: _h_number,
+    OpCode.DIVISIBLE: _h_number,
+    OpCode.STRING_SIZE_GREATER: _h_string_size,
+    OpCode.STRING_SIZE_LESS: _h_string_size,
+    OpCode.STRING_BOUNDS: _h_string_bounds,
+    OpCode.REGEX: _h_regex,
+    OpCode.ARRAY_SIZE_GREATER: _h_array_size,
+    OpCode.ARRAY_SIZE_LESS: _h_array_size,
+    OpCode.ARRAY_BOUNDS: _h_array_bounds,
+    OpCode.OBJECT_SIZE_GREATER: _h_object_size,
+    OpCode.OBJECT_SIZE_LESS: _h_object_size,
+    OpCode.DEFINES: _h_defines,
+    OpCode.DEFINES_ALL: _h_defines_all,
+    OpCode.PROPERTY_TYPE: _h_property_type,
+    OpCode.LOOP_PROPERTIES_MATCH: _h_loop_properties_match,
+    OpCode.LOOP_PROPERTIES_MATCH_CLOSED: _h_loop_properties_match_closed,
+    OpCode.LOOP_PROPERTIES: _h_loop_properties,
+    OpCode.LOOP_PROPERTIES_EXCEPT: _h_loop_properties_except,
+    OpCode.LOOP_ITEMS: _h_loop_items,
+    OpCode.LOOP_ITEMS_FROM: _h_loop_items_from,
+    OpCode.ARRAY_PREFIX: _h_array_prefix,
+    OpCode.CONTROL_LABEL: _h_control_label,
+}
+
+
+def build_tape(compiled: CompiledSchema) -> LocationTape:
+    """Lower a compiled schema to the tensor tape; raises
+    :class:`UnsupportedForBatch` outside the structural subset."""
+    if compiled.labels:
+        # ControlJump needs runtime recursion -- outside the flat subset
+        raise UnsupportedForBatch("recursive/shared labels not batchable")
+    b = _TapeBuilder()
+    root = b.new_loc()
+    b.add_group(compiled.instructions, root)
+    return b.build()
+
+
+def try_build_tape(compiled: CompiledSchema) -> Tuple[Optional[LocationTape], str]:
+    """Build the tape or report why the schema is not batchable."""
+    try:
+        return build_tape(compiled), ""
+    except UnsupportedForBatch as exc:
+        return None, str(exc)

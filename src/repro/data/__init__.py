@@ -1,0 +1,1 @@
+"""Data plane: JSON token tables, synthetic corpus, sharded pipeline."""

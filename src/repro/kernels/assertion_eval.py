@@ -1,0 +1,212 @@
+"""Pallas TPU kernel: fused assertion-tape evaluation.
+
+Evaluates every assertion row of a compiled location tape against every
+document node in one pass -- the tensorised version of the paper's CISC
+observation (§2.5): one *fused* pass over VMEM-resident columns beats
+dispatching many small instructions.
+
+The kernel computes a (nodes x assertion-rows) boolean matrix where entry
+(n, a) is "row a passes for node n" with the paper's *precondition*
+semantics baked in per op (wrong type => pass for AND rows, => no-match for
+OR/const rows).  Ownership masking (row applies only at its schema
+location) and group reduction happen in the surrounding jnp code -- they
+are cheap O(N*A) selects that XLA fuses.
+
+All 17 mini-ISA ops are evaluated branch-free on (BN, BA) tiles and
+combined with a select chain on the op code -- the VPU is wide enough that
+computing all candidates costs less than divergent control flow would.
+float32 is used for numeric bounds on TPU (no native f64); the CPU
+reference path keeps f64.  Precision caveat recorded in DESIGN.md §7.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.tape import AOP
+
+BLOCK_N = 256
+BLOCK_A = 256
+
+# node type codes (mirrors data.doc_table.TYPE_CODES)
+_T_NULL, _T_BOOL, _T_NUM, _T_STR, _T_ARR, _T_OBJ = 1, 2, 3, 4, 5, 6
+
+
+def _assertion_kernel(
+    # node columns, (BN, 1) each unless noted
+    n_type_ref,
+    n_isint_ref,
+    n_num_ref,
+    n_size_ref,
+    n_strhash_ref,  # (BN, 8) uint32
+    n_strpfx_ref,  # (BN, 2) uint32
+    # assertion columns, (BA, 1) each unless noted
+    a_op_ref,
+    a_f0_ref,
+    a_i0_ref,
+    a_i1_ref,
+    a_u0_ref,
+    a_u1_ref,
+    a_hash_ref,  # (BA, 8) uint32
+    out_ref,  # (BN, BA) int8
+):
+    ntype = n_type_ref[...]  # (BN, 1)
+    isint = n_isint_ref[...] != 0
+    num = n_num_ref[...]
+    size = n_size_ref[...]
+
+    op = a_op_ref[...].reshape(1, -1)  # (1, BA)
+    f0 = a_f0_ref[...].reshape(1, -1)
+    i0 = a_i0_ref[...].reshape(1, -1)
+    i1 = a_i1_ref[...].reshape(1, -1)
+    u0 = a_u0_ref[...].reshape(1, -1)
+    u1 = a_u1_ref[...].reshape(1, -1)
+
+    is_num = ntype == _T_NUM  # (BN, 1)
+    is_str = ntype == _T_STR
+    is_arr = ntype == _T_ARR
+    is_obj = ntype == _T_OBJ
+
+    # TYPE_MASK: node type bit in mask; integers-only via i1
+    type_bit = jnp.left_shift(jnp.int32(1), ntype.astype(jnp.int32))
+    in_mask = (type_bit & i0) != 0
+    ints_ok = jnp.logical_or(
+        jnp.logical_or(i1 == 0, jnp.logical_not(is_num)), isint
+    )
+    r_type = jnp.logical_and(in_mask, ints_ok)
+
+    cmp_num = num  # (BN, 1) broadcast against (1, BA)
+    r_ge = jnp.logical_or(~is_num, cmp_num >= f0)
+    r_gt = jnp.logical_or(~is_num, cmp_num > f0)
+    r_le = jnp.logical_or(~is_num, cmp_num <= f0)
+    r_lt = jnp.logical_or(~is_num, cmp_num < f0)
+    q = cmp_num / jnp.where(f0 == 0, jnp.ones_like(f0), f0)
+    divisible = jnp.logical_and(f0 != 0, q == jnp.floor(q))
+    r_mul = jnp.logical_or(~is_num, divisible)
+
+    r_str_min = jnp.logical_or(~is_str, size >= i0)
+    r_str_max = jnp.logical_or(~is_str, size <= i0)
+    r_arr_min = jnp.logical_or(~is_arr, size >= i0)
+    r_arr_max = jnp.logical_or(~is_arr, size <= i0)
+    r_obj_min = jnp.logical_or(~is_obj, size >= i0)
+    r_obj_max = jnp.logical_or(~is_obj, size <= i0)
+
+    # STR_PREFIX: compare first i0 (<=8) bytes; big-endian packing makes a
+    # left-aligned byte mask expressible as integer shifts
+    pfx0 = n_strpfx_ref[:, 0].reshape(-1, 1)
+    pfx1 = n_strpfx_ref[:, 1].reshape(-1, 1)
+    len0 = jnp.minimum(i0, 4)
+    len1 = jnp.maximum(i0 - 4, 0)
+    # mask of the first k bytes of a big-endian u32 (k in 0..4)
+    shift0 = (jnp.int32(4) - len0) * 8
+    shift1 = (jnp.int32(4) - len1) * 8
+    full = jnp.uint32(0xFFFFFFFF)
+    m0 = jnp.where(len0 == 0, jnp.uint32(0), (full >> shift0.astype(jnp.uint32)) << shift0.astype(jnp.uint32))
+    m1 = jnp.where(len1 == 0, jnp.uint32(0), (full >> shift1.astype(jnp.uint32)) << shift1.astype(jnp.uint32))
+    pfx_eq = jnp.logical_and((pfx0 & m0) == (u0 & m0), (pfx1 & m1) == (u1 & m1))
+    long_enough = size >= i0
+    r_prefix = jnp.logical_or(~is_str, jnp.logical_and(pfx_eq, long_enough))
+
+    # STR_EQ / const rows: exact-match semantics (no pass-on-skip)
+    str_eq = is_str
+    for lane in range(8):
+        nh = n_strhash_ref[:, lane].reshape(-1, 1)
+        ah = a_hash_ref[:, lane].reshape(1, -1)
+        str_eq = jnp.logical_and(str_eq, nh == ah)
+    r_str_eq = str_eq
+    r_str_eq_pre = jnp.logical_or(jnp.broadcast_to(~is_str, str_eq.shape), str_eq)
+    r_null = jnp.broadcast_to(ntype == _T_NULL, str_eq.shape)
+    is_bool = ntype == _T_BOOL
+    r_bool = jnp.logical_and(is_bool, num == f0)
+    r_num_const = jnp.logical_and(is_num, num == f0)
+
+    candidates = [
+        (AOP.TYPE_MASK, r_type),
+        (AOP.NUM_GE, r_ge),
+        (AOP.NUM_GT, r_gt),
+        (AOP.NUM_LE, r_le),
+        (AOP.NUM_LT, r_lt),
+        (AOP.NUM_MULTIPLE, r_mul),
+        (AOP.STR_MINLEN, r_str_min),
+        (AOP.STR_MAXLEN, r_str_max),
+        (AOP.ARR_MINLEN, r_arr_min),
+        (AOP.ARR_MAXLEN, r_arr_max),
+        (AOP.OBJ_MINPROPS, r_obj_min),
+        (AOP.OBJ_MAXPROPS, r_obj_max),
+        (AOP.STR_PREFIX, r_prefix),
+        (AOP.STR_EQ, r_str_eq),
+        (AOP.CONST_NULL, r_null),
+        (AOP.CONST_BOOL, r_bool),
+        (AOP.CONST_NUM, r_num_const),
+        (AOP.STR_EQ_PRE, r_str_eq_pre),
+    ]
+    result = jnp.zeros(out_ref.shape, jnp.bool_)
+    for code, value in candidates:
+        result = jnp.where(op == code, jnp.broadcast_to(value, result.shape), result)
+    out_ref[...] = result.astype(jnp.int8)
+
+
+def assertion_eval_pallas(
+    node_cols: dict,
+    asrt_cols: dict,
+    *,
+    block_n: int = BLOCK_N,
+    block_a: int = BLOCK_A,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (N, A) int8 pass matrix.  Caller pads to block multiples.
+
+    node_cols: type/is_int/num/size (N,), str_hash (N,8), str_prefix (N,2)
+    asrt_cols: op/f0/i0/i1/u0/u1 (A,), hash (A,8)
+    """
+    n = node_cols["type"].shape[0]
+    a = asrt_cols["op"].shape[0]
+    assert n % block_n == 0 and a % block_a == 0, (n, a)
+    grid = (n // block_n, a // block_a)
+
+    def col2d(x):
+        return x.reshape(-1, 1)
+
+    n_spec = pl.BlockSpec((block_n, 1), lambda i, j: (i, 0))
+    a_spec = pl.BlockSpec((block_a, 1), lambda i, j: (j, 0))
+    out = pl.pallas_call(
+        _assertion_kernel,
+        grid=grid,
+        in_specs=[
+            n_spec,
+            n_spec,
+            n_spec,
+            n_spec,
+            pl.BlockSpec((block_n, 8), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, 2), lambda i, j: (i, 0)),
+            a_spec,
+            a_spec,
+            a_spec,
+            a_spec,
+            a_spec,
+            a_spec,
+            pl.BlockSpec((block_a, 8), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_a), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, a), jnp.int8),
+        interpret=interpret,
+    )(
+        col2d(node_cols["type"].astype(jnp.int32)),
+        col2d(node_cols["is_int"].astype(jnp.int32)),
+        col2d(node_cols["num"]),
+        col2d(node_cols["size"].astype(jnp.int32)),
+        node_cols["str_hash"],
+        node_cols["str_prefix"],
+        col2d(asrt_cols["op"].astype(jnp.int32)),
+        col2d(asrt_cols["f0"]),
+        col2d(asrt_cols["i0"].astype(jnp.int32)),
+        col2d(asrt_cols["i1"].astype(jnp.int32)),
+        col2d(asrt_cols["u0"]),
+        col2d(asrt_cols["u1"]),
+        asrt_cols["hash"],
+    )
+    return out

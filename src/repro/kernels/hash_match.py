@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: semi-perfect-hash property matching (Blaze §4.1 on TPU).
+
+For every document node, find the schema property-table row whose (key-hash,
+owner-location) pair matches the node's (key-hash, parent-location).  This
+is the hot inner loop of schema-location assignment in the batched executor
+-- the tensorised analogue of the paper's hash-accelerated property lookup.
+
+Shape design: hashes are eight uint32 lanes (no 64-bit vector lanes on TPU).
+The kernel tiles the (nodes x table-rows) comparison space into VMEM blocks
+of (BN, BM); each of the eight lane-equality comparisons is a rank-2
+broadcast (BN, 1) vs (1, BM) on the VPU -- no rank-3 intermediates.  Across
+table tiles the minimum matching row index is accumulated in the output
+block (revisited output pattern: the N-tile output lives in VMEM across all
+M-tiles of the inner grid dimension).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BIG = 2**30  # python literal: kept out of traced-constant capture
+
+# Default VMEM tile sizes: 8-sublane x 128-lane aligned.
+BLOCK_N = 256
+BLOCK_M = 256
+
+
+def _hash_match_kernel(
+    q_lanes_ref,  # (BN, 8)  uint32  query (node key) hash lanes
+    q_owner_ref,  # (BN, 1)  int32   query owner (parent location)
+    t_lanes_ref,  # (BM, 8)  uint32  table hash lanes
+    t_owner_ref,  # (BM, 1)  int32   table owner location
+    out_ref,  # (BN, 1)  int32   min matching table row (global index)
+    *,
+    block_m: int,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.full(out_ref.shape, _BIG, jnp.int32)
+
+    q_owner = q_owner_ref[...]  # (BN, 1)
+    t_owner = t_owner_ref[...]  # (BM, 1)
+    matched = q_owner == t_owner.reshape(1, -1)  # (BN, BM)
+    # eight rank-2 lane comparisons, statically unrolled
+    for lane in range(8):
+        q = q_lanes_ref[:, lane].reshape(-1, 1)  # (BN, 1)
+        t = t_lanes_ref[:, lane].reshape(1, -1)  # (1, BM)
+        matched = jnp.logical_and(matched, q == t)
+    col = jax.lax.broadcasted_iota(jnp.int32, matched.shape, 1)
+    row_idx = jnp.where(matched, col + j * block_m, jnp.int32(_BIG))
+    best = jnp.min(row_idx, axis=1, keepdims=True)  # (BN, 1)
+    out_ref[...] = jnp.minimum(out_ref[...], best)
+
+
+def hash_match_pallas(
+    q_lanes: jax.Array,  # (N, 8) uint32
+    q_owner: jax.Array,  # (N,)   int32
+    t_lanes: jax.Array,  # (M, 8) uint32
+    t_owner: jax.Array,  # (M,)   int32
+    *,
+    block_n: int = BLOCK_N,
+    block_m: int = BLOCK_M,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (N,) int32: minimal matching table row or -1.
+
+    Inputs must be padded to block multiples by the caller (ops.py).
+    """
+    n, m = q_lanes.shape[0], t_lanes.shape[0]
+    assert n % block_n == 0 and m % block_m == 0, (n, m, block_n, block_m)
+    grid = (n // block_n, m // block_m)
+    out = pl.pallas_call(
+        functools.partial(_hash_match_kernel, block_m=block_m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, 8), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, 8), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_m, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        interpret=interpret,
+    )(q_lanes, q_owner.reshape(-1, 1), t_lanes, t_owner.reshape(-1, 1))
+    out = out.reshape(-1)
+    return jnp.where(out >= _BIG, jnp.int32(-1), out)

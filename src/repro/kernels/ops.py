@@ -1,0 +1,100 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Pads inputs to block multiples, dispatches to the Pallas kernel (interpret
+mode on CPU, compiled on TPU) or to the pure-jnp reference when
+``use_pallas=False``, and strips padding from the result.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import assertion_eval as _ae
+from . import hash_match as _hm
+from . import ref as _ref
+
+__all__ = ["hash_match", "assertion_eval"]
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: jax.Array, size: int, axis: int = 0, fill=0):
+    pad = size - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def _round_up(n: int, block: int) -> int:
+    return max(block, ((n + block - 1) // block) * block)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_m", "use_pallas", "interpret")
+)
+def hash_match(
+    q_lanes: jax.Array,
+    q_owner: jax.Array,
+    t_lanes: jax.Array,
+    t_owner: jax.Array,
+    *,
+    block_n: int = _hm.BLOCK_N,
+    block_m: int = _hm.BLOCK_M,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(N,) int32 minimal matching table row or -1 (see hash_match.py)."""
+    if not use_pallas:
+        return _ref.hash_match_ref(q_lanes, q_owner, t_lanes, t_owner)
+    interpret = _interpret_default() if interpret is None else interpret
+    n, m = q_lanes.shape[0], t_lanes.shape[0]
+    np_, mp = _round_up(n, block_n), _round_up(m, block_m)
+    out = _hm.hash_match_pallas(
+        _pad_to(q_lanes, np_),
+        # padded queries get owner -1; padded table rows owner -9 -> no match
+        _pad_to(q_owner, np_, fill=-1),
+        _pad_to(t_lanes, mp),
+        _pad_to(t_owner, mp, fill=-9),
+        block_n=block_n,
+        block_m=block_m,
+        interpret=interpret,
+    )
+    return out[:n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_a", "use_pallas", "interpret")
+)
+def assertion_eval(
+    node_cols: dict,
+    asrt_cols: dict,
+    *,
+    block_n: int = _ae.BLOCK_N,
+    block_a: int = _ae.BLOCK_A,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(N, A) int8 pass matrix (see assertion_eval.py)."""
+    if not use_pallas:
+        return _ref.assertion_eval_ref(node_cols, asrt_cols)
+    interpret = _interpret_default() if interpret is None else interpret
+    n = node_cols["type"].shape[0]
+    a = asrt_cols["op"].shape[0]
+    np_, ap = _round_up(n, block_n), _round_up(a, block_a)
+    node_pad = {k: _pad_to(v, np_) for k, v in node_cols.items()}
+    # padded assertion rows get op -1 -> never selected -> result 0
+    asrt_pad = {
+        k: _pad_to(v, ap, fill=(-1 if k == "op" else 0)) for k, v in asrt_cols.items()
+    }
+    out = _ae.assertion_eval_pallas(
+        node_pad, asrt_pad, block_n=block_n, block_a=block_a, interpret=interpret
+    )
+    return out[:n, :a]

@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for the Pallas kernels (per-kernel allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.tape import AOP
+
+_T_NULL, _T_BOOL, _T_NUM, _T_STR, _T_ARR, _T_OBJ = 1, 2, 3, 4, 5, 6
+
+
+def hash_match_ref(
+    q_lanes: jax.Array,  # (N, 8) uint32
+    q_owner: jax.Array,  # (N,)   int32
+    t_lanes: jax.Array,  # (M, 8) uint32
+    t_owner: jax.Array,  # (M,)   int32
+) -> jax.Array:
+    """(N,) int32: minimal matching table row or -1."""
+    lane_eq = q_lanes[:, None, :] == t_lanes[None, :, :]  # (N, M, 8)
+    matched = jnp.all(lane_eq, axis=-1) & (q_owner[:, None] == t_owner[None, :])
+    big = jnp.int32(2**30)
+    idx = jnp.where(matched, jnp.arange(t_lanes.shape[0], dtype=jnp.int32)[None, :], big)
+    best = jnp.min(idx, axis=1)
+    return jnp.where(best >= big, jnp.int32(-1), best)
+
+
+def assertion_eval_ref(node_cols: dict, asrt_cols: dict) -> jax.Array:
+    """(N, A) int8 pass matrix -- mirror of assertion_eval.py semantics."""
+    ntype = node_cols["type"].astype(jnp.int32)[:, None]  # (N, 1)
+    isint = node_cols["is_int"].astype(bool)[:, None]
+    num = node_cols["num"][:, None]
+    size = node_cols["size"].astype(jnp.int32)[:, None]
+    str_hash = node_cols["str_hash"]  # (N, 8)
+    str_pfx = node_cols["str_prefix"]  # (N, 2)
+
+    op = asrt_cols["op"].astype(jnp.int32)[None, :]  # (1, A)
+    f0 = asrt_cols["f0"][None, :]
+    i0 = asrt_cols["i0"].astype(jnp.int32)[None, :]
+    i1 = asrt_cols["i1"].astype(jnp.int32)[None, :]
+    u0 = asrt_cols["u0"][None, :]
+    u1 = asrt_cols["u1"][None, :]
+    a_hash = asrt_cols["hash"]  # (A, 8)
+
+    is_num = ntype == _T_NUM
+    is_str = ntype == _T_STR
+    is_arr = ntype == _T_ARR
+    is_obj = ntype == _T_OBJ
+
+    type_bit = jnp.left_shift(jnp.int32(1), ntype)
+    r_type = ((type_bit & i0) != 0) & ((i1 == 0) | ~is_num | isint)
+
+    r_ge = ~is_num | (num >= f0)
+    r_gt = ~is_num | (num > f0)
+    r_le = ~is_num | (num <= f0)
+    r_lt = ~is_num | (num < f0)
+    q = num / jnp.where(f0 == 0, jnp.ones_like(f0), f0)
+    r_mul = ~is_num | ((f0 != 0) & (q == jnp.floor(q)))
+
+    r_str_min = ~is_str | (size >= i0)
+    r_str_max = ~is_str | (size <= i0)
+    r_arr_min = ~is_arr | (size >= i0)
+    r_arr_max = ~is_arr | (size <= i0)
+    r_obj_min = ~is_obj | (size >= i0)
+    r_obj_max = ~is_obj | (size <= i0)
+
+    len0 = jnp.minimum(i0, 4)
+    len1 = jnp.maximum(i0 - 4, 0)
+    shift0 = ((4 - len0) * 8).astype(jnp.uint32)
+    shift1 = ((4 - len1) * 8).astype(jnp.uint32)
+    full = jnp.uint32(0xFFFFFFFF)
+    m0 = jnp.where(len0 == 0, jnp.uint32(0), (full >> shift0) << shift0)
+    m1 = jnp.where(len1 == 0, jnp.uint32(0), (full >> shift1) << shift1)
+    pfx_eq = ((str_pfx[:, 0:1] & m0) == (u0 & m0)) & ((str_pfx[:, 1:2] & m1) == (u1 & m1))
+    r_prefix = ~is_str | (pfx_eq & (size >= i0))
+
+    str_eq = jnp.all(str_hash[:, None, :] == a_hash[None, :, :], axis=-1)
+    r_str_eq = is_str & str_eq
+    r_str_eq_pre = ~is_str | str_eq
+    r_null = jnp.broadcast_to(ntype == _T_NULL, r_str_eq.shape)
+    r_bool = (ntype == _T_BOOL) & (num == f0)
+    r_num_const = is_num & (num == f0)
+
+    result = jnp.zeros(r_str_eq.shape, bool)
+    for code, value in [
+        (AOP.TYPE_MASK, r_type),
+        (AOP.NUM_GE, r_ge),
+        (AOP.NUM_GT, r_gt),
+        (AOP.NUM_LE, r_le),
+        (AOP.NUM_LT, r_lt),
+        (AOP.NUM_MULTIPLE, r_mul),
+        (AOP.STR_MINLEN, r_str_min),
+        (AOP.STR_MAXLEN, r_str_max),
+        (AOP.ARR_MINLEN, r_arr_min),
+        (AOP.ARR_MAXLEN, r_arr_max),
+        (AOP.OBJ_MINPROPS, r_obj_min),
+        (AOP.OBJ_MAXPROPS, r_obj_max),
+        (AOP.STR_PREFIX, r_prefix),
+        (AOP.STR_EQ, r_str_eq),
+        (AOP.CONST_NULL, r_null),
+        (AOP.CONST_BOOL, r_bool),
+        (AOP.CONST_NUM, r_num_const),
+        (AOP.STR_EQ_PRE, r_str_eq_pre),
+    ]:
+        result = jnp.where(op == code, jnp.broadcast_to(value, result.shape), result)
+    return result.astype(jnp.int8)

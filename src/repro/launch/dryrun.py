@@ -1,0 +1,302 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: for each cell
+the step function must ``.lower().compile()`` on BOTH the single-pod
+(16 data x 16 model = 256 chip) mesh and the multi-pod (2 pod x 16 x 16 =
+512 chip) mesh.  Per cell we record:
+
+* ``memory_analysis()``  -- bytes per device (proves the config fits HBM);
+* ``cost_analysis()``    -- HLO FLOPs / bytes for the §Roofline terms;
+* collective bytes parsed from the post-SPMD HLO text (all-gather /
+  all-reduce / reduce-scatter / all-to-all / collective-permute), which
+  cost_analysis does not report.
+
+Results are cached as JSON under ``results/dryrun/`` -- benchmarks/roofline
+and EXPERIMENTS.md read from there.
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-3-8b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+"""
+
+import argparse
+import json
+import re
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# v5e hardware model (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s effective per chip (1 link assumption, DESIGN.md)
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*([^=\n]+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# ring-algorithm byte multipliers (bytes over links / buffer size)
+_COLLECTIVE_FACTOR = {
+    "all-reduce": 2.0,  # reduce-scatter + all-gather phases
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        nbytes = _DTYPE_BYTES.get(dtype)
+        if nbytes is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nbytes
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes moved by collectives, by op kind (weighted)."""
+    out: Dict[str, float] = {}
+    raw: Dict[str, int] = {}
+    count: Dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        b = _shape_bytes(type_str)
+        raw[op] = raw.get(op, 0) + b
+        count[op] = count.get(op, 0) + 1
+        out[op] = out.get(op, 0.0) + b * _COLLECTIVE_FACTOR[op]
+    out["_total_weighted"] = sum(v for k, v in out.items() if not k.startswith("_"))
+    out["_counts"] = count  # type: ignore[assignment]
+    return out
+
+
+def _mesh_for(multi_pod: bool):
+    from .mesh import make_production_mesh
+
+    need = 512 if multi_pod else 256
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"dry-run needs {need} host devices; run via `python -m "
+            f"repro.launch.dryrun` so XLA_FLAGS is set before jax init "
+            f"(have {len(devices)})"
+        )
+    if multi_pod:
+        return make_production_mesh(multi_pod=True)
+    # single-pod mesh over the first 256 placeholder devices
+    mesh_devices = np.array(devices[:256]).reshape(16, 16)
+    from jax.sharding import Mesh
+
+    return Mesh(mesh_devices, ("data", "model"))
+
+
+def _scan_flops_correction(cfg, kind: str) -> float:
+    """XLA cost_analysis counts a while-loop body once; the depth scan runs
+    n_periods times.  Returns the multiplier to apply to scanned work.
+
+    Conservative approach: we report both raw HLO numbers and the
+    scan-corrected numbers; the correction multiplies body terms by
+    (n_periods) assuming scanned work dominates (validated against the
+    analytic 6ND model in benchmarks/roofline.py)."""
+    return float(cfg.n_periods)
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool):
+    """Build + lower the step function for one cell.  Returns lowered."""
+    from ..configs import get_config
+    from ..models.model import Model
+    from ..train import optimizer as opt
+    from ..train.train_step import make_decode_step, make_prefill_step, make_train_step
+    from .specs import SHAPES, cell_applicable, input_specs
+
+    cfg = get_config(arch)
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return None, why, None
+    mesh = _mesh_for(multi_pod)
+    model = Model(cfg)
+    seq, batch, kind = SHAPES[shape]
+    specs = input_specs(cfg, shape)
+
+    if kind == "train":
+        ocfg = opt.OptimizerConfig(state_dtype=cfg.optimizer_state_dtype)
+        step, (params_sh, opt_sh, _), _ = make_train_step(
+            model, ocfg, mesh, batch=batch, donate=True
+        )
+        aparams = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+        aopt = jax.eval_shape(lambda p: opt.init(ocfg, p), aparams)
+        batch_specs = {k: v for k, v in specs.items()}
+        lowered = step.lower(aparams, aopt, batch_specs)
+    elif kind == "prefill":
+        # cache must cover tokens + modality-prefix positions
+        step, _, _ = make_prefill_step(
+            model, mesh, batch=batch, max_len=seq + cfg.prefix_len
+        )
+        aparams = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+        args = [aparams, specs["tokens"]]
+        if cfg.prefix_len:
+            args.append(specs["prefix"])
+        lowered = step.lower(*args)
+    else:  # decode
+        step, _, _ = make_decode_step(
+            model, mesh, batch=batch, max_len=seq,
+            seq_sharded=(shape == "long_500k"),
+        )
+        aparams = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+        lowered = step.lower(
+            aparams, specs["token"], specs["cache"], specs["cache_len"]
+        )
+    return lowered, "", cfg
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, *, verbose: bool = True) -> Dict[str, Any]:
+    t0 = time.time()
+    lowered, skip_reason, cfg = lower_cell(arch, shape, multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if lowered is None:
+        return {
+            "arch": arch, "shape": shape, "mesh": mesh_name,
+            "status": "skipped", "reason": skip_reason,
+        }
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    hlo = compiled.as_text()
+    from .hlo_analysis import analyze_hlo
+
+    ha = analyze_hlo(hlo)
+    chips = 512 if multi_pod else 256
+
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    scan_mult = _scan_flops_correction(cfg, shape)
+
+    result = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_name,
+        "status": "ok",
+        "chips": chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "bytes_per_device": int(getattr(mem, "temp_size_in_bytes", 0))
+            + int(getattr(mem, "argument_size_in_bytes", 0))
+            + int(getattr(mem, "output_size_in_bytes", 0))
+            - int(getattr(mem, "alias_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+            "generated_code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        },
+        "cost": {
+            # raw XLA numbers (while bodies counted ONCE -- see hlo_analysis)
+            "xla_flops_per_device_raw": flops,
+            "xla_bytes_per_device_raw": bytes_accessed,
+            "scan_trip_count": cfg.n_periods,
+            "transcendentals": float(cost.get("transcendentals", 0.0)),
+            # trip-count-weighted static analysis (the roofline inputs)
+            "dot_flops_per_device": ha.dot_flops,
+            "hbm_traffic_bytes_per_device": ha.hbm_traffic_bytes,
+        },
+        "collectives": ha.collective_bytes,
+        "collective_counts": ha.collective_counts,
+        "collective_bytes_per_device": ha.total_collective_bytes,
+        "while_trip_counts": ha.while_trip_counts,
+        "model": {
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+        },
+    }
+    if verbose:
+        print(
+            f"[dryrun] {arch:24s} {shape:12s} {mesh_name:8s} "
+            f"compile={t_compile:6.1f}s mem/dev={result['memory']['bytes_per_device']/2**30:6.2f}GiB "
+            f"dotflops/dev={ha.dot_flops:.3e} coll/dev={ha.total_collective_bytes:.3e}B"
+        )
+    return result
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool) -> Path:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    return RESULTS_DIR / f"{arch}__{shape}__{mesh_name}.json"
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--arch", type=str, default=None)
+    parser.add_argument("--shape", type=str, default=None)
+    parser.add_argument("--all", action="store_true")
+    parser.add_argument("--multi-pod-only", action="store_true")
+    parser.add_argument("--single-pod-only", action="store_true")
+    parser.add_argument("--force", action="store_true", help="recompute cached cells")
+    args = parser.parse_args()
+
+    from ..configs import ARCHS
+    from .specs import SHAPES
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    archs = ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True]
+    if args.multi_pod_only:
+        meshes = [True]
+    if args.single_pod_only:
+        meshes = [False]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for multi_pod in meshes:
+                path = cell_path(arch, shape, multi_pod)
+                if path.exists() and not args.force:
+                    print(f"[dryrun] cached: {path.name}")
+                    continue
+                try:
+                    result = run_cell(arch, shape, multi_pod)
+                except Exception as exc:  # noqa: BLE001 -- record and continue
+                    result = {
+                        "arch": arch, "shape": shape,
+                        "mesh": "2x16x16" if multi_pod else "16x16",
+                        "status": "error", "error": f"{type(exc).__name__}: {exc}",
+                    }
+                    failures.append(result)
+                    print(f"[dryrun] ERROR {arch} {shape}: {exc}")
+                path.write_text(json.dumps(result, indent=2, default=str))
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run cells failed")
+    print("[dryrun] all requested cells complete")
+
+
+if __name__ == "__main__":
+    main()

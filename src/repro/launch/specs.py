@@ -1,0 +1,87 @@
+"""Input ShapeDtypeStructs for every (architecture x input-shape) cell.
+
+``input_specs`` returns allocation-free stand-ins (weak-type-correct,
+shardable) for every model input of a given shape cell.  The modality
+frontends of the [audio]/[vlm] architectures are stubs: ``prefix`` is the
+precomputed frame/patch embedding tensor.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ArchConfig
+from ..models.model import Model
+
+# The assigned shape grid (seq_len, global_batch, kind)
+SHAPES: Dict[str, Tuple[int, int, str]] = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+
+    @property
+    def seq_len(self) -> int:
+        return SHAPES[self.shape][0]
+
+    @property
+    def batch(self) -> int:
+        return SHAPES[self.shape][1]
+
+    @property
+    def kind(self) -> str:
+        return SHAPES[self.shape][2]
+
+
+def cell_applicable(cfg: ArchConfig, shape: str) -> Tuple[bool, str]:
+    """long_500k needs sub-quadratic mixing (DESIGN.md §4)."""
+    if shape == "long_500k" and not cfg.supports_long_context:
+        return False, "pure full-attention arch: long_500k skipped (DESIGN.md §4)"
+    return True, ""
+
+
+def input_specs(cfg: ArchConfig, shape: str) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the step function of this cell."""
+    seq, batch, kind = SHAPES[shape]
+    i32 = jnp.int32
+    if kind == "train":
+        specs: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), i32),
+        }
+        if cfg.prefix_len:
+            specs["prefix"] = jax.ShapeDtypeStruct(
+                (batch, cfg.prefix_len, cfg.d_model), cfg.dtype()
+            )
+        return specs
+    if kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((batch, seq), i32)}
+        if cfg.prefix_len:
+            specs["prefix"] = jax.ShapeDtypeStruct(
+                (batch, cfg.prefix_len, cfg.d_model), cfg.dtype()
+            )
+        return specs
+    # decode: one new token against a seq-length cache
+    model = Model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(batch, seq))
+    return {
+        "token": jax.ShapeDtypeStruct((batch, 1), i32),
+        "cache": cache,
+        "cache_len": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def abstract_params(cfg: ArchConfig):
+    model = Model(cfg)
+    return jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))

@@ -1,0 +1,318 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA attention, SwiGLU.
+
+Parameters are plain pytrees (dicts of jnp arrays).  Initialisers take an
+explicit PRNG key and a dtype; every layer exposes ``init`` and pure apply
+functions so the stack composes under ``jax.lax.scan`` and ``pjit``.
+
+Weight-name conventions carry *logical axis* metadata (sharding/rules.py
+maps logical axes -> mesh axes): ``("embed", "heads")`` etc.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Initialisation helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(cfg: ArchConfig, width: Optional[int] = None) -> Params:
+    return {"scale": jnp.ones(width or cfg.d_model, cfg.pdtype())}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    normed = x32 * jax.lax.rsqrt(var + eps)
+    return (normed * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponent)  # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (Dh/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Grouped-query attention
+# ---------------------------------------------------------------------------
+
+
+def attention_init(key, cfg: ArchConfig) -> Params:
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.pdtype()
+    keys = jax.random.split(key, 4)
+    params = {
+        "wq": dense_init(keys[0], (d, h, hd), dt),
+        "wk": dense_init(keys[1], (d, kvh, hd), dt),
+        "wv": dense_init(keys[2], (d, kvh, hd), dt),
+        "wo": dense_init(keys[3], (h, hd, d), dt),
+    }
+    if cfg.qkv_bias:
+        params["bq"] = jnp.zeros((h, hd), dt)
+        params["bk"] = jnp.zeros((kvh, hd), dt)
+        params["bv"] = jnp.zeros((kvh, hd), dt)
+    return params
+
+
+def _qkv(params: Params, cfg: ArchConfig, x: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return q, k, v
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array, n_rep: int) -> jax.Array:
+    """q: (B, Sq, H, Dh), k: (B, Sk, KVH, Dh) -> (B, H, Sq, Sk)."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    qg = q.reshape(b, sq, kvh, n_rep, hd)
+    scores = jnp.einsum("bsgrk,btgk->bgrst", qg, k)
+    return scores.reshape(b, h, sq, k.shape[1])
+
+
+def _gqa_values(probs: jax.Array, v: jax.Array, n_rep: int) -> jax.Array:
+    """probs: (B, H, Sq, Sk), v: (B, Sk, KVH, Dh) -> (B, Sq, H, Dh)."""
+    b, h, sq, sk = probs.shape
+    kvh = v.shape[2]
+    pg = probs.reshape(b, kvh, n_rep, sq, sk)
+    out = jnp.einsum("bgrst,btgk->bsgrk", pg, v)
+    return out.reshape(b, sq, h, v.shape[3])
+
+
+# full (B, H, S, S) score tensors blow HBM for archs whose head count does
+# not divide the model axis (qwen 40H, arctic 56H, phi4 24H stay unsharded
+# on heads); the chunked path scans query blocks instead (flash-attention
+# memory shape).  Cq=256 keeps the worst case (arctic: B_loc=16 x 56H x
+# 256 x 4096 x f32) under ~4 GiB.
+CHUNKED_ATTN_THRESHOLD = 4096
+Q_CHUNK = 256
+
+
+def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-token int8 quantization of K/V: (values (B,S,KVH,Dh), scales
+    (B,S)).  Per-token (not per-head) scales keep the scale tensor small
+    enough to replicate when head_dim is the sharded cache dim
+    (DESIGN.md §7)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(-1, -2)) / 127.0 + 1e-8
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale[..., None, None]), -127, 127
+    )
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def _chunk_size(s: int, target: int) -> int:
+    """Largest divisor of ``s`` that is <= target (prefix-extended
+    sequences like 33024 are not multiples of 256)."""
+    cq = min(target, s)
+    while s % cq:
+        cq -= 1
+    return cq
+
+
+def _chunked_causal_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, n_rep: int, scale: float, dtype
+) -> jax.Array:
+    """Scan over query chunks: peak scores buffer is (B, H, Cq, S)."""
+    b, s, h, hd = q.shape
+    cq = _chunk_size(s, Q_CHUNK)
+    n_chunks = s // cq
+    q_chunks = q.reshape(b, n_chunks, cq, h, hd).swapaxes(0, 1)
+    key_pos = jnp.arange(s)
+
+    def body(_, args):
+        i, qc = args
+        scores = _gqa_scores(qc, k, n_rep) * scale  # (B, H, Cq, S)
+        q_pos = i * cq + jnp.arange(cq)
+        mask = key_pos[None, :] <= q_pos[:, None]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(dtype)
+        return None, _gqa_values(probs, v, n_rep)  # (B, Cq, H, Dh)
+
+    # remat per chunk: backward recomputes scores/probs instead of saving
+    # (B, H, Cq, S) x n_chunks -- the flash-attention trade
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    _, chunks = jax.lax.scan(body, None, (jnp.arange(n_chunks), q_chunks))
+    return chunks.swapaxes(0, 1).reshape(b, s, h, hd)
+
+
+def attention(
+    params: Params,
+    cfg: ArchConfig,
+    x: jax.Array,  # (B, S, D)
+    positions: jax.Array,  # (B, S)
+    kv_cache: Optional[Dict[str, jax.Array]] = None,
+    cache_index: Optional[jax.Array] = None,
+    causal: bool = True,
+) -> Tuple[jax.Array, Any]:
+    """Full-sequence (train/prefill) or incremental (decode) attention.
+
+    Decode: ``x`` is (B, 1, D), ``kv_cache`` is {"k", "v"[, "k_scale",
+    "v_scale"]} with (B, S_max, KVH, Dh) layout (int8 + scales when the
+    config selects a quantized cache), ``cache_index`` the current length.
+    """
+    from ..sharding.constraints import constrain, model_axis_divides
+
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    q, k, v = _qkv(params, cfg, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # Pin Q/K/V layouts BEFORE any chunk scan: with a seq-sharded residual
+    # stream XLA otherwise re-all-gathers K/V inside every query-chunk
+    # iteration (22 TB/device of prefill collectives; EXPERIMENTS.md §Perf
+    # A4).  CAUTION: with_sharding_constraint None-dims mean *replicated*,
+    # not "unconstrained" (§Perf A5, first attempt refuted: replicated-Q
+    # attention collapsed qwen/arctic/phi4 useful-ratio 0.75 -> 0.33).
+    #   heads divide the model axis -> Megatron head sharding;
+    #   otherwise -> shard K/V on the *key-sequence* dim: scores inherit
+    #   the Sk sharding (TP of the quadratic work without head splits) and
+    #   softmax/value reductions become small all-reduces.
+    if kv_cache is None:  # train/prefill full-sequence paths only
+        if model_axis_divides(cfg.n_heads):
+            q = constrain(q, "batch", None, "model", None)
+        if model_axis_divides(cfg.n_kv_heads):
+            k = constrain(k, "batch", None, "model", None)
+            v = constrain(v, "batch", None, "model", None)
+        else:
+            k = constrain(k, "batch", "model", None, None)
+            v = constrain(v, "batch", "model", None, None)
+
+    if kv_cache is not None:
+        idx = cache_index
+        quantized = "k_scale" in kv_cache
+        if quantized:
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            ck = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], kq, idx, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], vq, idx, axis=1)
+            cks = jax.lax.dynamic_update_slice_in_dim(kv_cache["k_scale"], ks, idx, axis=1)
+            cvs = jax.lax.dynamic_update_slice_in_dim(kv_cache["v_scale"], vs, idx, axis=1)
+            k_full = ck.astype(x.dtype) * cks[..., None, None].astype(x.dtype)
+            v_full = cv.astype(x.dtype) * cvs[..., None, None].astype(x.dtype)
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["k"], k.astype(kv_cache["k"].dtype), idx, axis=1
+            )
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["v"], v.astype(kv_cache["v"].dtype), idx, axis=1
+            )
+            k_full, v_full = ck, cv
+            new_cache = {"k": ck, "v": cv}
+        s_max = k_full.shape[1]
+        scores = _gqa_scores(q, k_full, n_rep) * scale  # (B, H, 1, S_max)
+        key_pos = jnp.arange(s_max)
+        mask = key_pos[None, None, None, :] <= (idx + jnp.arange(x.shape[1]))[None, None, :, None]
+        scores = jnp.where(mask, scores, -1e30)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+        out = _gqa_values(probs, v_full, n_rep)
+    else:
+        if causal and x.shape[1] >= CHUNKED_ATTN_THRESHOLD:
+            out = _chunked_causal_attention(q, k, v, n_rep, scale, x.dtype)
+        else:
+            scores = _gqa_scores(q, k, n_rep) * scale  # (B, H, S, S)
+            if causal:
+                s = x.shape[1]
+                mask = jnp.tril(jnp.ones((s, s), bool))
+                scores = jnp.where(mask[None, None], scores, -1e30)
+            probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+            out = _gqa_values(probs, v, n_rep)
+        new_cache = (k, v)  # prefill returns fresh K/V for cache seeding
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FFN
+# ---------------------------------------------------------------------------
+
+
+def swiglu_init(key, cfg: ArchConfig, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.pdtype()
+    keys = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(keys[0], (d, f), dt),
+        "w_up": dense_init(keys[1], (d, f), dt),
+        "w_down": dense_init(keys[2], (f, d), dt),
+    }
+
+
+def swiglu(params: Params, x: jax.Array) -> jax.Array:
+    gate = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, params["w_gate"]))
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    return jnp.einsum("bsf,fd->bsd", gate * up, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / head
+# ---------------------------------------------------------------------------
+
+
+def embedding_init(key, cfg: ArchConfig) -> Params:
+    dt = cfg.pdtype()
+    keys = jax.random.split(key, 2)
+    vp = cfg.padded_vocab  # padded so the vocab dim shards (DESIGN.md §5)
+    params = {"tokens": dense_init(keys[0], (vp, cfg.d_model), dt, scale=1.0)}
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(keys[1], (cfg.d_model, vp), dt)
+    return params
+
+
+def embed(params: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["tokens"], tokens, axis=0)
+
+
+def unembed(params: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["tokens"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask padded vocab positions so softmax/argmax never select them
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits

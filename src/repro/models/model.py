@@ -1,0 +1,112 @@
+"""Model facade: init / train-forward / prefill / decode for any ArchConfig.
+
+Modality frontends ([audio]/[vlm] archs) are stubs per the assignment:
+``prefix_embeddings`` (precomputed frame/patch embeddings) are an input and
+are prepended to the token embeddings; loss applies to token positions.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import transformer as T
+from ..sharding.constraints import constrain_bsd, constrain_logits
+from .config import ArchConfig
+
+Params = Dict[str, Any]
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # -- parameters -----------------------------------------------------------
+
+    def init(self, key) -> Params:
+        k_embed, k_stack, k_norm = jax.random.split(key, 3)
+        return {
+            "embedding": L.embedding_init(k_embed, self.cfg),
+            "stack": T.init_stack(k_stack, self.cfg),
+            "final_norm": L.rmsnorm_init(self.cfg),
+        }
+
+    # -- embedding (with modality-prefix stub) ---------------------------------
+
+    def _embed_inputs(
+        self, params: Params, tokens: jax.Array, prefix: Optional[jax.Array]
+    ) -> Tuple[jax.Array, jax.Array]:
+        x = L.embed(params["embedding"], tokens)  # (B, S, D)
+        if prefix is not None:
+            x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+        x = constrain_bsd(x)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        return x, positions
+
+    # -- train ------------------------------------------------------------------
+
+    def logits_train(
+        self,
+        params: Params,
+        tokens: jax.Array,  # (B, S)
+        prefix_embeddings: Optional[jax.Array] = None,  # (B, P, D)
+        remat: bool = True,
+    ) -> jax.Array:
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, tokens, prefix_embeddings)
+        x = T.forward_train(params["stack"], cfg, x, positions, remat=remat)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        if prefix_embeddings is not None:
+            x = x[:, prefix_embeddings.shape[1] :]
+        return constrain_logits(L.unembed(params["embedding"], cfg, x))
+
+    def loss(
+        self,
+        params: Params,
+        tokens: jax.Array,
+        labels: jax.Array,
+        prefix_embeddings: Optional[jax.Array] = None,
+        remat: bool = True,
+    ) -> jax.Array:
+        logits = self.logits_train(params, tokens, prefix_embeddings, remat=remat)
+        logits = logits.astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        mask = labels >= 0
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+
+    # -- serve --------------------------------------------------------------------
+
+    def prefill(
+        self,
+        params: Params,
+        tokens: jax.Array,  # (B, S)
+        max_len: int,
+        prefix_embeddings: Optional[jax.Array] = None,
+    ) -> Tuple[jax.Array, Params]:
+        """Returns (last-position logits, decode cache)."""
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, tokens, prefix_embeddings)
+        x, cache = T.forward_prefill(params["stack"], cfg, x, positions, max_len)
+        x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+        return constrain_logits(L.unembed(params["embedding"], cfg, x)), cache
+
+    def decode_step(
+        self,
+        params: Params,
+        token: jax.Array,  # (B, 1)
+        cache: Params,
+        cache_len: jax.Array,  # scalar
+    ) -> Tuple[jax.Array, Params]:
+        cfg = self.cfg
+        x = L.embed(params["embedding"], token)
+        x, cache = T.forward_decode(params["stack"], cfg, x, cache, cache_len)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return constrain_logits(L.unembed(params["embedding"], cfg, x)), cache
+
+    def init_cache(self, batch: int, max_len: int) -> Params:
+        return T.init_cache(self.cfg, batch, max_len)

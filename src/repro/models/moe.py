@@ -1,0 +1,115 @@
+"""Mixture-of-Experts FFN with capacity-based einsum dispatch.
+
+Mesh-TensorFlow-style grouped dispatch: tokens are split into groups of
+``group_size``; within a group each token's top-k experts are assigned a
+capacity slot via cumulative sums, and dispatch/combine are one-hot
+einsums.  Under pjit with experts sharded on the ``model`` axis (and groups
+on ``data``) the two einsums lower to all-to-all collectives -- expert
+parallelism without manual communication.  Tokens overflowing an expert's
+capacity are dropped (standard Switch behaviour); ``capacity_factor``
+controls the trade-off.
+
+Arctic's dense-residual variant evaluates a small dense SwiGLU in parallel
+with the MoE and sums the results.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig, MoEConfig
+from .layers import dense_init, swiglu, swiglu_init
+
+Params = Dict[str, Any]
+
+GROUP_SIZE = 1024  # tokens per dispatch group (VMEM-friendly one-hots)
+
+
+def moe_init(key, cfg: ArchConfig) -> Params:
+    moe = cfg.moe
+    assert moe is not None
+    d, f, e = cfg.d_model, cfg.d_ff, moe.num_experts
+    dt = cfg.pdtype()
+    keys = jax.random.split(key, 5)
+    params = {
+        "router": dense_init(keys[0], (d, e), jnp.float32),  # fp32 routing
+        "w_gate": dense_init(keys[1], (e, d, f), dt),
+        "w_up": dense_init(keys[2], (e, d, f), dt),
+        "w_down": dense_init(keys[3], (e, f, d), dt),
+    }
+    if moe.dense_residual_ff:
+        params["dense_residual"] = swiglu_init(keys[4], cfg, moe.dense_residual_ff)
+    return params
+
+
+def _capacity(moe: MoEConfig, group_tokens: int) -> int:
+    cap = int(np.ceil(group_tokens * moe.top_k / moe.num_experts * moe.capacity_factor))
+    return max(cap, moe.top_k)
+
+
+def moe_apply(params: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    moe = cfg.moe
+    b, s, d = x.shape
+    tokens = b * s
+    g_size = min(GROUP_SIZE, tokens)
+    assert tokens % g_size == 0, (tokens, g_size)
+    n_groups = tokens // g_size
+    e = moe.num_experts
+    cap = _capacity(moe, g_size)
+
+    xg = x.reshape(n_groups, g_size, d)
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, T, E)
+
+    # top-k selection, then capacity slots via cumulative position
+    top_probs, top_idx = jax.lax.top_k(probs, moe.top_k)  # (G, T, K)
+    # normalise the k gate weights
+    top_probs = top_probs / jnp.maximum(top_probs.sum(-1, keepdims=True), 1e-9)
+
+    combine = jnp.zeros((n_groups, g_size, e, cap), x.dtype)
+    # slot occupancy is computed per expert across the k selections in order
+    # (k=0 has priority), matching Switch/MTF semantics
+    expert_onehot_prev = jnp.zeros((n_groups, g_size, e), jnp.int32)
+    for k in range(moe.top_k):
+        sel = jax.nn.one_hot(top_idx[..., k], e, dtype=jnp.int32)  # (G, T, E)
+        # position of this token within the expert = tokens (and earlier-k
+        # picks) before it choosing the same expert
+        prior = jnp.cumsum(sel, axis=1) - sel + jnp.cumsum(expert_onehot_prev, axis=1)
+        pos = jnp.sum(sel * prior, axis=-1)  # (G, T)
+        keep = pos < cap
+        gate = (top_probs[..., k] * keep).astype(x.dtype)  # dropped tokens lose this expert
+        slot = jax.nn.one_hot(pos, cap, dtype=x.dtype)  # (G, T, C)
+        combine = combine + (
+            gate[..., None, None] * sel[..., :, None].astype(x.dtype) * slot[..., None, :]
+        )
+        expert_onehot_prev = expert_onehot_prev + sel
+
+    dispatch = (combine > 0).astype(x.dtype)  # (G, T, E, C)
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, xg)  # (G, E, C, D)
+
+    gate_p = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, params["w_gate"]))
+    up_p = jnp.einsum("gecd,edf->gecf", expert_in, params["w_up"])
+    expert_out = jnp.einsum("gecf,efd->gecd", gate_p * up_p, params["w_down"])
+
+    out = jnp.einsum("gtec,gecd->gtd", combine, expert_out).reshape(b, s, d)
+
+    if moe.dense_residual_ff:
+        out = out + swiglu(params["dense_residual"], x)
+    return out
+
+
+def aux_load_balance_loss(params: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Switch-style auxiliary load-balancing loss (mean over groups)."""
+    moe = cfg.moe
+    b, s, d = x.shape
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    density = jnp.mean(jax.nn.one_hot(top1, moe.num_experts), axis=(0, 1))
+    density_proxy = jnp.mean(probs, axis=(0, 1))
+    return moe.num_experts * jnp.sum(density * density_proxy)

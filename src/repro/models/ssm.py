@@ -1,0 +1,339 @@
+"""State-space and linear-attention mixers: Mamba (Jamba) and RWKV-6 (Finch).
+
+Both are implemented in chunked form: a ``lax.scan`` over sequence chunks
+carries the recurrent state, while work *within* a chunk is parallel
+(associative scan for Mamba; decay-cumprod linear attention for RWKV-6).
+This is the TPU analogue of the CUDA selective-scan kernel: the chunk size
+bounds the materialised (B, chunk, D_inner, N) tensor to VMEM-friendly
+sizes, and the cross-chunk dependency is a tiny state tensor.
+
+Decode performs the exact recurrence, one step per token, O(1) in context
+length -- which is why these two architectures run the ``long_500k`` shape
+while pure-attention models skip it.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding.constraints import constrain
+from .config import ArchConfig
+from .layers import dense_init
+
+Params = Dict[str, Any]
+
+MAMBA_CHUNK = 256
+RWKV_CHUNK = 64
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM)
+# ---------------------------------------------------------------------------
+
+
+def mamba_init(key, cfg: ArchConfig) -> Params:
+    d, di, n, kconv = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    dt_rank = max(1, d // 16)
+    dt = cfg.pdtype()
+    keys = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(keys[0], (d, 2 * di), dt),
+        "conv_w": dense_init(keys[1], (kconv, di), dt, scale=1.0 / np.sqrt(kconv)),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(keys[2], (di, dt_rank + 2 * n), dt),
+        "dt_proj": dense_init(keys[3], (dt_rank, di), dt),
+        "dt_bias": jnp.zeros((di,), dt),
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+        ),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(keys[4], (di, d), dt),
+    }
+
+
+def _mamba_discretize(params, cfg: ArchConfig, xz: jax.Array):
+    """Project a chunk to (dA, dBx, C, z, gate-path x) tensors."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    dt_rank = max(1, cfg.d_model // 16)
+    x, z = jnp.split(xz, 2, axis=-1)  # (B, C, Di) each
+    proj = jnp.einsum("bci,ir->bcr", x, params["x_proj"])
+    dt_r, b_mat, c_mat = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt_full = jax.nn.softplus(
+        jnp.einsum("bcr,ri->bci", dt_r, params["dt_proj"]) + params["dt_bias"]
+    ).astype(jnp.float32)
+    a = -jnp.exp(params["A_log"])  # (Di, N)
+    dA = jnp.exp(dt_full[..., None] * a)  # (B, C, Di, N)
+    dBx = (
+        dt_full[..., None]
+        * b_mat[:, :, None, :].astype(jnp.float32)
+        * x[..., None].astype(jnp.float32)
+    )  # (B, C, Di, N)
+    return x, z, dA, dBx, c_mat
+
+
+def _mamba_chunk_scan(h0: jax.Array, dA: jax.Array, dBx: jax.Array):
+    """Parallel in-chunk scan: h_t = dA_t * h_{t-1} + dBx_t, given h0."""
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    a_acc, b_acc = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h = a_acc * h0[:, None] + b_acc  # (B, C, Di, N)
+    return h, h[:, -1]
+
+
+def mamba_forward(
+    params: Params,
+    cfg: ArchConfig,
+    u: jax.Array,  # (B, S, D)
+    chunk: int = MAMBA_CHUNK,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence Mamba; returns output and final recurrent state."""
+    b, s, d = u.shape
+    di, n, kconv = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    xz_all = jnp.einsum("bsd,de->bse", u, params["in_proj"])  # (B, S, 2Di)
+    # pin the inner (channel) dim on the model axis: the whole selective
+    # scan is channel-independent, so Di shards cleanly (tensor parallel)
+    xz_all = constrain(xz_all, "batch", None, "model")
+
+    x_all = xz_all[..., :di]
+    # causal depthwise conv over the whole sequence
+    x_pad = jnp.pad(x_all, ((0, 0), (kconv - 1, 0), (0, 0)))
+    conv = sum(
+        x_pad[:, i : i + s] * params["conv_w"][i][None, None, :] for i in range(kconv)
+    ) + params["conv_b"]
+    x_conv = jax.nn.silu(conv)
+    xz_all = jnp.concatenate([x_conv, xz_all[..., di:]], axis=-1)
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+    xz_chunks = xz_all.reshape(b, n_chunks, chunk, 2 * di).swapaxes(0, 1)
+
+    def step(h, xz):
+        xz = constrain(xz, "batch", None, "model")
+        x, z, dA, dBx, c_mat = _mamba_discretize(params, cfg, xz)
+        dA = constrain(dA, "batch", None, "model", None)
+        dBx = constrain(dBx, "batch", None, "model", None)
+        h_all, h_last = _mamba_chunk_scan(h, dA, dBx)
+        y = jnp.einsum("bcin,bcn->bci", h_all, c_mat.astype(jnp.float32))
+        y = y + params["D"] * x.astype(jnp.float32)
+        y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype)
+        return constrain(h_last, "batch", "model", None), y
+
+    h0 = constrain(jnp.zeros((b, di, n), jnp.float32), "batch", "model", None)
+    # remat the chunk body: backward recomputes the discretised (B, C, Di,
+    # N) tensors instead of saving them per chunk (441 GiB -> HBM-viable
+    # for jamba train_4k; see EXPERIMENTS.md §Perf)
+    step = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable)
+    h_final, y_chunks = jax.lax.scan(step, h0, xz_chunks)
+    y = y_chunks.swapaxes(0, 1).reshape(b, s, di)
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"])
+    state = {
+        "h": h_final,
+        "conv": x_all[:, s - (kconv - 1) :, :] if s >= kconv - 1 else x_all,
+    }
+    return out, state
+
+
+def mamba_decode_step(
+    params: Params, cfg: ArchConfig, u: jax.Array, state: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token Mamba step.  u: (B, 1, D); state: {h (B,Di,N), conv (B,k-1,Di)}."""
+    b = u.shape[0]
+    di, n, kconv = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    xz = jnp.einsum("bsd,de->bse", u, params["in_proj"])  # (B, 1, 2Di)
+    x_new = xz[..., :di]  # (B, 1, Di)
+    window = jnp.concatenate([state["conv"], x_new], axis=1)  # (B, k, Di)
+    conv = (
+        jnp.einsum("bki,ki->bi", window, params["conv_w"]) + params["conv_b"]
+    )[:, None, :]
+    x_conv = jax.nn.silu(conv)
+    xz = jnp.concatenate([x_conv, xz[..., di:]], axis=-1)
+    x, z, dA, dBx, c_mat = _mamba_discretize(params, cfg, xz)
+    h = dA[:, 0] * state["h"] + dBx[:, 0]  # (B, Di, N)
+    y = jnp.einsum("bin,bn->bi", h, c_mat[:, 0].astype(jnp.float32))
+    y = y + params["D"] * x[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(u.dtype)
+    out = jnp.einsum("bi,id->bd", y, params["out_proj"])[:, None, :]
+    return out, {"h": h, "conv": window[:, 1:]}
+
+
+def mamba_state_init(cfg: ArchConfig, batch: int) -> Dict[str, jax.Array]:
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), cfg.dtype()),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch): data-dependent decay linear attention
+# ---------------------------------------------------------------------------
+
+
+def rwkv6_init(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    n_heads = max(1, d // 64)
+    dt = cfg.pdtype()
+    keys = jax.random.split(key, 7)
+    return {
+        "w_r": dense_init(keys[0], (d, d), dt),
+        "w_k": dense_init(keys[1], (d, d), dt),
+        "w_v": dense_init(keys[2], (d, d), dt),
+        "w_g": dense_init(keys[3], (d, d), dt),
+        "w_decay": dense_init(keys[4], (d, d), dt, scale=0.01),
+        "decay_bias": jnp.full((d,), -6.0, jnp.float32),  # slow default decay
+        "bonus": jnp.zeros((n_heads, 64), jnp.float32),  # 'u' first-token boost
+        "w_o": dense_init(keys[5], (d, d), dt),
+        "shift_mix": jnp.full((d,), 0.5, dt),  # token-shift interpolation
+    }
+
+
+def _rwkv_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads)
+
+
+def rwkv6_forward(
+    params: Params,
+    cfg: ArchConfig,
+    x: jax.Array,  # (B, S, D)
+    chunk: int = RWKV_CHUNK,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b, s, d = x.shape
+    n_heads = max(1, d // 64)
+    hd = d // n_heads
+
+    # token shift: mix current with previous token
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    xm = x + params["shift_mix"] * (x_prev - x)
+
+    r = _rwkv_heads(jnp.einsum("bsd,de->bse", xm, params["w_r"]), n_heads)
+    k = _rwkv_heads(jnp.einsum("bsd,de->bse", xm, params["w_k"]), n_heads)
+    v = _rwkv_heads(jnp.einsum("bsd,de->bse", xm, params["w_v"]), n_heads)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xm, params["w_g"]))
+    # data-dependent per-channel decay in (0, 1)
+    w = jnp.exp(
+        -jnp.exp(
+            (jnp.einsum("bsd,de->bse", xm, params["w_decay"]).astype(jnp.float32))
+            + params["decay_bias"]
+        )
+    )
+    w = _rwkv_heads(w, n_heads)  # (B, S, H, hd)
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    n_chunks = s // chunk
+
+    rc = r.reshape(b, n_chunks, chunk, n_heads, hd).swapaxes(0, 1)
+    kc = k.reshape(b, n_chunks, chunk, n_heads, hd).swapaxes(0, 1)
+    vc = v.reshape(b, n_chunks, chunk, n_heads, hd).swapaxes(0, 1)
+    wc = w.reshape(b, n_chunks, chunk, n_heads, hd).swapaxes(0, 1)
+    u = params["bonus"]  # (H, hd)
+
+    def step(state, inputs):
+        rr, kk, vv, ww = (t.astype(jnp.float32) for t in inputs)  # (B, C, H, hd)
+        # cumulative decay within the chunk: P_t = prod_{j<=t} w_j
+        logw = jnp.log(jnp.maximum(ww, 1e-12))
+        cum = jnp.cumsum(logw, axis=1)  # (B, C, H, hd)
+        p_incl = jnp.exp(cum)
+        p_excl = jnp.exp(cum - logw)  # prod_{j<t}
+        # inter-chunk: r_t . (P_excl_t * state)
+        inter = jnp.einsum("bchk,bhkl->bchl", rr * p_excl, state)
+        # intra-chunk: sum_{j<t} (r_t P_excl_t / P_incl_j) (k_j . ) v_j + bonus diag
+        r_hat = rr * p_excl
+        k_hat = kk / jnp.maximum(p_incl, 1e-12)
+        att = jnp.einsum("bchk,bjhk->bhcj", r_hat, k_hat)  # (B, H, C, C)
+        c_len = att.shape[-1]
+        mask = jnp.tril(jnp.ones((c_len, c_len), bool), k=-1)
+        att = jnp.where(mask[None, None], att, 0.0)
+        intra = jnp.einsum("bhcj,bjhl->bchl", att, vv)
+        # current-token bonus path: (r_t . (u * k_t)) v_t
+        bonus = jnp.einsum("bchk,bchk->bch", rr, u[None, None] * kk)
+        cur = bonus[..., None] * vv
+        out = inter + intra + cur  # (B, C, H, hd)
+        # state update: S' = diag(P_incl_T) S + sum_j (P_incl_T/P_incl_j) k_j v_j
+        p_total = p_incl[:, -1]  # (B, H, hd)
+        scale = p_total[:, None] / jnp.maximum(p_incl, 1e-12)  # (B, C, H, hd)
+        outer = jnp.einsum("bchk,bchl->bhkl", kk * scale, vv)
+        new_state = p_total[..., None] * state + outer
+        return new_state, out
+
+    state0 = jnp.zeros((b, n_heads, hd, hd), jnp.float32)
+    step = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable)
+    state_f, out_chunks = jax.lax.scan(step, state0, (rc, kc, vc, wc))
+    out = out_chunks.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
+    out = out * g
+    out = jnp.einsum("bsd,de->bse", out, params["w_o"])
+    return out, {"state": state_f, "x_last": x[:, -1]}
+
+
+def rwkv6_decode_step(
+    params: Params, cfg: ArchConfig, x: jax.Array, cache: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token RWKV step; O(1) in context length."""
+    b, _, d = x.shape
+    n_heads = max(1, d // 64)
+    hd = d // n_heads
+    xt = x[:, 0]  # (B, D)
+    xm = xt + params["shift_mix"] * (cache["x_last"] - xt)
+
+    def heads(t):
+        return t.reshape(b, n_heads, hd)
+
+    r = heads(xm @ params["w_r"]).astype(jnp.float32)
+    k = heads(xm @ params["w_k"]).astype(jnp.float32)
+    v = heads(xm @ params["w_v"]).astype(jnp.float32)
+    g = jax.nn.silu(xm @ params["w_g"])
+    w = jnp.exp(
+        -jnp.exp((xm @ params["w_decay"]).astype(jnp.float32) + params["decay_bias"])
+    )
+    w = heads(w)
+    state = cache["state"]  # (B, H, hd, hd)
+    u = params["bonus"]
+    kv = jnp.einsum("bhk,bhl->bhkl", k, v)
+    out = jnp.einsum("bhk,bhkl->bhl", r, state + u[None, :, :, None] * kv)
+    new_state = w[..., None] * state + kv
+    out = out.reshape(b, d).astype(x.dtype) * g
+    out = (out @ params["w_o"])[:, None, :]
+    return out, {"state": new_state, "x_last": xt}
+
+
+def rwkv6_state_init(cfg: ArchConfig, batch: int) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    n_heads = max(1, d // 64)
+    hd = d // n_heads
+    return {
+        "state": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+        "x_last": jnp.zeros((batch, d), cfg.dtype()),
+    }
+
+
+# RWKV channel mix (used as the 'ffn' for rwkv blocks)
+
+
+def rwkv_channel_mix_init(key, cfg: ArchConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = cfg.pdtype()
+    keys = jax.random.split(key, 3)
+    return {
+        "w_k": dense_init(keys[0], (d, f), dt),
+        "w_v": dense_init(keys[1], (f, d), dt),
+        "w_r": dense_init(keys[2], (d, d), dt),
+        "shift_mix": jnp.full((d,), 0.5, dt),
+    }
+
+
+def rwkv_channel_mix(params: Params, x: jax.Array) -> jax.Array:
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    xm = x + params["shift_mix"] * (x_prev - x)
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xm, params["w_k"])))
+    kv = jnp.einsum("bsf,fd->bsd", k, params["w_v"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xm, params["w_r"]))
+    return r * kv

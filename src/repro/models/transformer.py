@@ -1,0 +1,259 @@
+"""Composable decoder stack: scan-over-periods with heterogeneous layers.
+
+The model is ``n_periods`` repetitions of a static *period* (list of
+LayerSpec).  All parameters are stacked on a leading period axis and the
+depth dimension lowers as a single ``jax.lax.scan`` -- one compiled period
+body regardless of depth (compile-time and HBM win; XLA keeps weights
+sharded per the param specs and the scan carries only activations).
+
+Each layer is pre-norm residual:  x += mixer(norm(x));  x += ffn(norm(x)).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import moe as M
+from . import ssm as S
+from ..sharding.constraints import constrain_bsd
+from .config import ArchConfig, LayerSpec
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Period init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: ArchConfig, spec: LayerSpec) -> Params:
+    keys = jax.random.split(key, 4)
+    p: Params = {"norm_mixer": L.rmsnorm_init(cfg), "norm_ffn": L.rmsnorm_init(cfg)}
+    if spec.mixer == "attention":
+        p["attn"] = L.attention_init(keys[0], cfg)
+    elif spec.mixer == "mamba":
+        p["mamba"] = S.mamba_init(keys[0], cfg)
+    elif spec.mixer == "rwkv6":
+        p["rwkv"] = S.rwkv6_init(keys[0], cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn == "dense":
+        p["ffn"] = L.swiglu_init(keys[1], cfg)
+    elif spec.ffn == "moe":
+        p["moe"] = M.moe_init(keys[1], cfg)
+    elif spec.ffn == "none":
+        p["cmix"] = S.rwkv_channel_mix_init(keys[1], cfg)
+    else:
+        raise ValueError(spec.ffn)
+    return p
+
+
+def init_stack(key, cfg: ArchConfig) -> Params:
+    """Stacked parameters: each leaf gains a leading (n_periods,) axis."""
+    period_keys = jax.random.split(key, cfg.n_periods)
+
+    def one_period(k):
+        lkeys = jax.random.split(k, len(cfg.period))
+        return {
+            f"layer{i}": _layer_init(lkeys[i], cfg, spec)
+            for i, spec in enumerate(cfg.period)
+        }
+
+    return jax.vmap(one_period)(period_keys)
+
+
+# ---------------------------------------------------------------------------
+# Cache structure (decode)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Params:
+    """Per-period-position caches stacked on a leading (n_periods,) axis."""
+
+    def one_period(_):
+        cache: Params = {}
+        for i, spec in enumerate(cfg.period):
+            if spec.mixer == "attention":
+                kvh, hd = cfg.n_kv_heads, cfg.head_dim
+                if cfg.kv_cache_dtype == "int8":
+                    cache[f"layer{i}"] = {
+                        "k": jnp.zeros((batch, max_len, kvh, hd), jnp.int8),
+                        "v": jnp.zeros((batch, max_len, kvh, hd), jnp.int8),
+                        "k_scale": jnp.zeros((batch, max_len), jnp.float32),
+                        "v_scale": jnp.zeros((batch, max_len), jnp.float32),
+                    }
+                else:
+                    cache[f"layer{i}"] = {
+                        "k": jnp.zeros((batch, max_len, kvh, hd), cfg.dtype()),
+                        "v": jnp.zeros((batch, max_len, kvh, hd), cfg.dtype()),
+                    }
+            elif spec.mixer == "mamba":
+                cache[f"layer{i}"] = S.mamba_state_init(cfg, batch)
+            elif spec.mixer == "rwkv6":
+                cache[f"layer{i}"] = S.rwkv6_state_init(cfg, batch)
+        return cache
+
+    return jax.vmap(one_period)(jnp.arange(cfg.n_periods))
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer_train(
+    p: Params, *, cfg: ArchConfig, spec: LayerSpec, x: jax.Array, positions: jax.Array
+) -> jax.Array:
+    h = L.rmsnorm(p["norm_mixer"], x, cfg.norm_eps)
+    if spec.mixer == "attention":
+        mixed, _ = L.attention(p["attn"], cfg, h, positions)
+    elif spec.mixer == "mamba":
+        mixed, _ = S.mamba_forward(p["mamba"], cfg, h)
+    else:
+        mixed, _ = S.rwkv6_forward(p["rwkv"], cfg, h)
+    x = x + mixed
+    h = L.rmsnorm(p["norm_ffn"], x, cfg.norm_eps)
+    if spec.ffn == "dense":
+        x = x + L.swiglu(p["ffn"], h)
+    elif spec.ffn == "moe":
+        x = x + M.moe_apply(p["moe"], cfg, h)
+    else:
+        x = x + S.rwkv_channel_mix(p["cmix"], h)
+    return x
+
+
+def forward_train(
+    stack: Params,
+    cfg: ArchConfig,
+    x: jax.Array,  # (B, S, D) embedded inputs
+    positions: jax.Array,  # (B, S)
+    remat: bool = True,
+) -> jax.Array:
+    """Scan the stacked periods over the embedded sequence."""
+
+    # NOTE: per-layer nested remat inside the period was tried and refuted:
+    # +19% recompute FLOPs with no peak-memory win (EXPERIMENTS.md §Perf,
+    # jamba iteration 3) -- period-level remat is the right granularity.
+    def period_body(carry, period_params):
+        # seq-sharded carry = Megatron sequence parallelism: the saved
+        # residual stack shrinks by the model-axis size
+        h = constrain_bsd(carry, seq_shard=True)
+        for i, spec in enumerate(cfg.period):
+            h = _apply_layer_train(
+                period_params[f"layer{i}"], cfg=cfg, spec=spec, x=h, positions=positions
+            )
+        return constrain_bsd(h, seq_shard=True), None
+
+    body = period_body
+    if remat:
+        body = jax.checkpoint(
+            period_body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    x, _ = jax.lax.scan(body, x, stack)
+    return x
+
+
+def forward_prefill(
+    stack: Params,
+    cfg: ArchConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    max_len: int,
+) -> Tuple[jax.Array, Params]:
+    """Forward pass that also builds the decode cache."""
+    batch, s, _ = x.shape
+
+    def period_body(carry, period_params):
+        h = constrain_bsd(carry, seq_shard=True)
+        cache_out: Params = {}
+        for i, spec in enumerate(cfg.period):
+            p = period_params[f"layer{i}"]
+            hn = L.rmsnorm(p["norm_mixer"], h, cfg.norm_eps)
+            if spec.mixer == "attention":
+                mixed, (k, v) = L.attention(p["attn"], cfg, hn, positions)
+                pad = max_len - s
+                if cfg.kv_cache_dtype == "int8":
+                    kq, ks = L.quantize_kv(k)
+                    vq, vs = L.quantize_kv(v)
+                    cache_out[f"layer{i}"] = {
+                        "k": jnp.pad(kq, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                        "v": jnp.pad(vq, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                        "k_scale": jnp.pad(ks, ((0, 0), (0, pad))),
+                        "v_scale": jnp.pad(vs, ((0, 0), (0, pad))),
+                    }
+                else:
+                    cache_out[f"layer{i}"] = {
+                        "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                        "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                    }
+            elif spec.mixer == "mamba":
+                mixed, state = S.mamba_forward(p["mamba"], cfg, hn)
+                kc = cfg.ssm_conv - 1
+                conv = state["conv"]
+                if conv.shape[1] < kc:
+                    conv = jnp.pad(conv, ((0, 0), (kc - conv.shape[1], 0), (0, 0)))
+                cache_out[f"layer{i}"] = {"h": state["h"], "conv": conv}
+            else:
+                mixed, state = S.rwkv6_forward(p["rwkv"], cfg, hn)
+                cache_out[f"layer{i}"] = state
+            h = h + mixed
+            hn = L.rmsnorm(p["norm_ffn"], h, cfg.norm_eps)
+            if spec.ffn == "dense":
+                h = h + L.swiglu(p["ffn"], hn)
+            elif spec.ffn == "moe":
+                h = h + M.moe_apply(p["moe"], cfg, hn)
+            else:
+                h = h + S.rwkv_channel_mix(p["cmix"], hn)
+        return h, cache_out
+
+    x, cache = jax.lax.scan(period_body, x, stack)
+    return x, cache
+
+
+def forward_decode(
+    stack: Params,
+    cfg: ArchConfig,
+    x: jax.Array,  # (B, 1, D)
+    cache: Params,
+    cache_len: jax.Array,  # scalar int32: current context length
+) -> Tuple[jax.Array, Params]:
+    """Single-token decode step against the cache."""
+    positions = jnp.full((x.shape[0], 1), cache_len, jnp.int32)
+
+    def period_body(carry, scanned):
+        h = constrain_bsd(carry)
+        period_params, period_cache = scanned
+        new_cache: Params = {}
+        for i, spec in enumerate(cfg.period):
+            p = period_params[f"layer{i}"]
+            hn = L.rmsnorm(p["norm_mixer"], h, cfg.norm_eps)
+            if spec.mixer == "attention":
+                c = period_cache[f"layer{i}"]
+                mixed, updated = L.attention(
+                    p["attn"], cfg, hn, positions,
+                    kv_cache=c, cache_index=cache_len,
+                )
+                new_cache[f"layer{i}"] = updated
+            elif spec.mixer == "mamba":
+                mixed, st = S.mamba_decode_step(p["mamba"], cfg, hn, period_cache[f"layer{i}"])
+                new_cache[f"layer{i}"] = st
+            else:
+                mixed, st = S.rwkv6_decode_step(p["rwkv"], cfg, hn, period_cache[f"layer{i}"])
+                new_cache[f"layer{i}"] = st
+            h = h + mixed
+            hn = L.rmsnorm(p["norm_ffn"], h, cfg.norm_eps)
+            if spec.ffn == "dense":
+                h = h + L.swiglu(p["ffn"], hn)
+            elif spec.ffn == "moe":
+                h = h + M.moe_apply(p["moe"], cfg, hn)
+            else:
+                h = h + S.rwkv_channel_mix(p["cmix"], hn)
+        return h, new_cache
+
+    x, new_cache = jax.lax.scan(period_body, x, (stack, cache))
+    return x, new_cache

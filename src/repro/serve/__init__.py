@@ -1,0 +1,5 @@
+"""Serving: request admission (Blaze), prefill/decode engine, KV caching."""
+
+from .engine import ServeConfig, ServeEngine
+
+__all__ = ["ServeConfig", "ServeEngine"]

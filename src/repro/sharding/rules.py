@@ -1,0 +1,268 @@
+"""Logical-axis -> mesh-axis sharding rules (DP / TP / EP / SP / pod).
+
+Megatron-style tensor parallelism on the ``model`` axis, FSDP/ZeRO-style
+parameter+optimizer sharding on the (``pod``, ``data``) axes, expert
+parallelism for MoE weights (experts on ``model``, expert-FFN input dim on
+FSDP), sequence parallelism for long-context decode caches.
+
+Rules are name-based over pytree paths and *divisibility-checked*: a rule
+axis that does not divide the actual dimension is dropped (e.g. kv_heads=8
+on a model axis of 16 -> kv projections fall back to FSDP-only sharding).
+All stacked (scan) parameters have a leading period axis that is always
+replicated.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ArchConfig
+
+# name -> per-dimension logical axes (after the leading scan axis)
+# logical axes: "fsdp" (pod+data), "tensor" (model), None (replicated)
+_PARAM_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings (not scanned: no leading period axis)
+    "embedding.tokens": ("tensor", "fsdp"),
+    "embedding.head": ("fsdp", "tensor"),
+    # attention
+    "attn.wq": ("fsdp", "tensor", None),
+    "attn.wk": ("fsdp", "tensor", None),
+    "attn.wv": ("fsdp", "tensor", None),
+    "attn.wo": ("tensor", None, "fsdp"),
+    "attn.bq": ("tensor", None),
+    "attn.bk": ("tensor", None),
+    "attn.bv": ("tensor", None),
+    # dense FFN
+    "ffn.w_gate": ("fsdp", "tensor"),
+    "ffn.w_up": ("fsdp", "tensor"),
+    "ffn.w_down": ("tensor", "fsdp"),
+    # MoE: experts on tensor axis (EP), expert-FFN dims on fsdp
+    "moe.router": ("fsdp", None),
+    "moe.w_gate": ("tensor", "fsdp", None),
+    "moe.w_up": ("tensor", "fsdp", None),
+    "moe.w_down": ("tensor", None, "fsdp"),
+    "moe.dense_residual.w_gate": ("fsdp", "tensor"),
+    "moe.dense_residual.w_up": ("fsdp", "tensor"),
+    "moe.dense_residual.w_down": ("tensor", "fsdp"),
+    # Mamba (inner dim on tensor: conv + scan are channel-independent)
+    "mamba.in_proj": ("fsdp", "tensor"),
+    "mamba.conv_w": (None, "tensor"),
+    "mamba.conv_b": ("tensor",),
+    "mamba.x_proj": ("tensor", None),
+    "mamba.dt_proj": (None, "tensor"),
+    "mamba.dt_bias": ("tensor",),
+    "mamba.A_log": ("tensor", None),
+    "mamba.D": ("tensor",),
+    "mamba.out_proj": ("tensor", "fsdp"),
+    # RWKV-6
+    "rwkv.w_r": ("fsdp", "tensor"),
+    "rwkv.w_k": ("fsdp", "tensor"),
+    "rwkv.w_v": ("fsdp", "tensor"),
+    "rwkv.w_g": ("fsdp", "tensor"),
+    "rwkv.w_decay": ("fsdp", "tensor"),
+    "rwkv.w_o": ("tensor", "fsdp"),
+    "rwkv.decay_bias": ("tensor",),
+    "rwkv.bonus": (None, None),
+    "rwkv.shift_mix": (None,),
+    # RWKV channel mix
+    "cmix.w_k": ("fsdp", "tensor"),
+    "cmix.w_v": ("tensor", "fsdp"),
+    "cmix.w_r": ("fsdp", "tensor"),
+    "cmix.shift_mix": (None,),
+}
+
+
+def _logical_to_mesh(axis: Optional[str], mesh: Mesh):
+    if axis is None:
+        return None
+    if axis == "tensor":
+        return "model" if "model" in mesh.axis_names else None
+    if axis == "fsdp":
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        return axes if axes else None
+    raise ValueError(axis)
+
+
+def _axis_size(mesh: Mesh, mesh_axis) -> int:
+    if mesh_axis is None:
+        return 1
+    if isinstance(mesh_axis, tuple):
+        out = 1
+        for a in mesh_axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[mesh_axis]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return ".".join(parts)
+
+
+def _spec_for(path_s: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    # match the longest rule suffix present in the path
+    rule = None
+    for name, axes in _PARAM_RULES.items():
+        if path_s.endswith(name) or (name in path_s):
+            rule = axes
+            break
+    if rule is None:
+        return P()  # norms, scalars: replicated
+    ndim = len(shape)
+    # stacked (scan) params have one extra leading axis
+    offset = ndim - len(rule)
+    spec: list = [None] * ndim
+    for i, logical in enumerate(rule):
+        dim = offset + i
+        if dim < 0:
+            continue
+        mesh_axis = _logical_to_mesh(logical, mesh)
+        if mesh_axis is None:
+            continue
+        if shape[dim] % _axis_size(mesh, mesh_axis) != 0:
+            continue  # divisibility fallback: replicate this dim
+        spec[dim] = mesh_axis
+    return P(*spec)
+
+
+def param_pspecs(params: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(_path_str(path), np.shape(leaf), mesh), params
+    )
+
+
+def shard_params(params: Any, mesh: Mesh) -> Any:
+    """Device-put params with their production sharding."""
+    specs = param_pspecs(params, mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), params, specs
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activations / inputs
+# ---------------------------------------------------------------------------
+
+
+def activation_specs(
+    mesh: Mesh, *, batch: int, seq_sharded: bool = False, vocab: Optional[int] = None
+) -> Dict[str, P]:
+    """Input/activation PartitionSpecs.
+
+    ``seq_sharded=True`` activates sequence parallelism: used for
+    long-context decode where batch < data-axis size (long_500k, B=1).
+    ``vocab`` enables the logits vocab-sharding divisibility check.
+    """
+    b_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    total = 1
+    for a in b_axes:
+        total *= mesh.shape[a]
+    if batch % max(total, 1) != 0:
+        # batch not divisible by the DP axes: drop pod first, then data
+        b_axes = tuple(a for a in b_axes[1:]) if len(b_axes) > 1 else ()
+        total = 1
+        for a in b_axes:
+            total *= mesh.shape[a]
+        if b_axes and batch % total != 0:
+            b_axes = ()
+    batch_spec = b_axes if b_axes else None
+    seq_spec = ("data",) if (seq_sharded and "data" in mesh.axis_names) else None
+    vocab_axis = "model" if "model" in mesh.axis_names else None
+    if vocab is not None and vocab_axis is not None and vocab % mesh.shape["model"] != 0:
+        vocab_axis = None  # odd vocab (e.g. 49155): replicate logits dim
+    return {
+        "tokens": P(batch_spec, None),
+        "labels": P(batch_spec, None),
+        "prefix": P(batch_spec, None, None),
+        "logits": P(batch_spec, None, vocab_axis),
+        "batch": P(batch_spec),
+        "seq": P(seq_spec),
+    }
+
+
+def cache_pspec(mesh: Mesh, *, batch: int, seq_sharded: bool) -> Dict[str, P]:
+    """Decode-cache PartitionSpecs (stacked leading period axis).
+
+    KV tensors are (periods, B, S, KVH, Dh): batch on data when divisible,
+    else sequence-parallel over data (long_500k).
+    """
+    b_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    total = 1
+    for a in b_axes:
+        total *= mesh.shape[a]
+    batch_ok = batch % max(total, 1) == 0 and not seq_sharded
+    model_axis = "model" if "model" in mesh.axis_names else None
+    if batch_ok:
+        # batch on DP axes; the model-axis dim of the KV tensor is chosen
+        # per-shape in cache_specs_tree: kv heads when they divide (local
+        # cache update, no collectives), else head_dim (local update,
+        # cheap score all-reduce), else the sequence (SP; update reshards).
+        return {
+            "kv": P(None, b_axes, None, None, None),  # model dim set later
+            "ssm_h": P(None, b_axes, model_axis, None),
+            "ssm_conv": P(None, b_axes, None, model_axis),
+            "rwkv_state": P(None, b_axes, None, None, None),
+            "rwkv_x": P(None, b_axes, None),
+        }
+    # long-context, tiny batch: shard the sequence over data (SP); the
+    # model-dim choice still applies on top
+    return {
+        "kv": P(None, None, ("data",) if "data" in mesh.axis_names else None, None, None),
+        "ssm_h": P(None, None, model_axis, None),
+        "ssm_conv": P(None, None, None, model_axis),
+        "rwkv_state": P(None, None, None, None, None),
+        "rwkv_x": P(None, None, None),
+    }
+
+
+def cache_specs_tree(cache: Any, mesh: Mesh, *, batch: int, seq_sharded: bool) -> Any:
+    table = cache_pspec(mesh, batch=batch, seq_sharded=seq_sharded)
+
+    model_size = mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+    def pick(path, leaf):
+        s = _path_str(path)
+        nd = np.ndim(leaf)
+        if s.endswith(".k") or s.endswith(".v"):
+            base = list(table["kv"])
+            shape = np.shape(leaf)  # (periods, B, S, KVH, Dh)
+            if model_size > 1 and base[2] != ("data",):
+                kvh, dh = shape[3], shape[4]
+                if kvh % model_size == 0:
+                    base[3] = "model"  # best: fully local cache updates
+                elif dh % model_size == 0:
+                    base[4] = "model"  # local updates + score all-reduce
+                elif shape[2] % model_size == 0:
+                    base[2] = "model"  # SP fallback: update reshards
+            elif model_size > 1 and base[2] == ("data",):
+                # long-context: seq on data; add model on heads or head_dim
+                kvh, dh = shape[3], shape[4]
+                if kvh % model_size == 0:
+                    base[3] = "model"
+                elif dh % model_size == 0:
+                    base[4] = "model"
+            return P(*base)
+        if s.endswith("_scale"):  # int8 KV scales: (periods, B, S)
+            kv = table["kv"]
+            return P(*kv[:nd])
+        if s.endswith(".h"):
+            return table["ssm_h"]
+        if s.endswith(".conv"):
+            return table["ssm_conv"]
+        if s.endswith(".state"):
+            return table["rwkv_state"]
+        if s.endswith(".x_last"):
+            return table["rwkv_x"]
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(pick, cache)

@@ -1,0 +1,254 @@
+"""Sharded train / prefill / decode step builders.
+
+``make_train_step`` returns a jitted function with explicit in/out
+shardings and donated (params, opt_state) buffers.  Gradients inherit the
+parameter sharding; XLA inserts the hierarchical (ICI-then-DCI) gradient
+reduce-scatter/all-gather pairs implied by the FSDP specs, overlapping them
+with the backward pass.
+
+``make_dp_compressed_step`` is the pure-data-parallel variant built on
+``shard_map`` with *explicit* collectives, enabling int8 gradient
+compression with error feedback across the pod axis -- the
+distributed-optimization trick for DCI-bound multi-pod deployments (tested
+on CPU via host-device forks; see tests/test_distributed.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ArchConfig
+from ..models.model import Model
+from ..sharding import activation_specs, cache_specs_tree, param_pspecs
+from ..sharding.constraints import activation_sharding
+from . import optimizer as opt
+
+Params = Any
+
+
+def _named(mesh: Mesh, tree_specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    model: Model,
+    ocfg: opt.OptimizerConfig,
+    mesh: Mesh,
+    *,
+    batch: int,
+    donate: bool = True,
+    remat: bool = True,
+):
+    """Returns (step_fn, in_shardings, out_shardings) -- jit-wrapped."""
+    cfg = model.cfg
+    pspecs = param_pspecs(_abstract_params(model), mesh)
+    acts = activation_specs(mesh, batch=batch, vocab=cfg.padded_vocab)
+
+    def step(params, opt_state, batch_data):
+        with activation_sharding(mesh, batch=batch, vocab=cfg.padded_vocab):
+            def loss_fn(p):
+                return model.loss(
+                    p,
+                    batch_data["tokens"],
+                    batch_data["labels"],
+                    batch_data.get("prefix"),
+                    remat=remat,
+                )
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            new_params, new_state, metrics = opt.update(ocfg, grads, opt_state, params)
+            metrics = dict(metrics, loss=loss)
+            return new_params, new_state, metrics
+
+    params_sh = _named(mesh, pspecs)
+    opt_sh = opt.OptState(
+        step=NamedSharding(mesh, P()), m=params_sh, v=params_sh
+    )
+    batch_sh = {
+        "tokens": NamedSharding(mesh, acts["tokens"]),
+        "labels": NamedSharding(mesh, acts["labels"]),
+    }
+    if cfg.prefix_len:
+        batch_sh["prefix"] = NamedSharding(mesh, acts["prefix"])
+    metrics_sh = {
+        k: NamedSharding(mesh, P()) for k in ("lr", "grad_norm", "loss")
+    }
+    jitted = jax.jit(
+        step,
+        in_shardings=(params_sh, opt_sh, batch_sh),
+        out_shardings=(params_sh, opt_sh, metrics_sh),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return jitted, (params_sh, opt_sh, batch_sh), (params_sh, opt_sh, metrics_sh)
+
+
+def _abstract_params(model: Model):
+    """Shape-only params (no allocation) for sharding-rule resolution."""
+    return jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(model: Model, mesh: Mesh, *, batch: int, max_len: int):
+    cfg = model.cfg
+    pspecs = param_pspecs(_abstract_params(model), mesh)
+    acts = activation_specs(mesh, batch=batch, vocab=cfg.padded_vocab)
+    params_sh = _named(mesh, pspecs)
+
+    def prefill(params, tokens, prefix=None):
+        with activation_sharding(mesh, batch=batch, vocab=cfg.padded_vocab):
+            return model.prefill(params, tokens, max_len, prefix)
+
+    abstract_cache = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+    cache_specs = cache_specs_tree(abstract_cache, mesh, batch=batch, seq_sharded=False)
+    out_sh = (
+        NamedSharding(mesh, acts["logits"]),
+        _named(mesh, cache_specs),
+    )
+    in_sh = [params_sh, NamedSharding(mesh, acts["tokens"])]
+    if cfg.prefix_len:
+        in_sh.append(NamedSharding(mesh, acts["prefix"]))
+        return jax.jit(prefill, in_shardings=tuple(in_sh), out_shardings=out_sh), in_sh, out_sh
+    fn = lambda params, tokens: prefill(params, tokens)
+    return jax.jit(fn, in_shardings=tuple(in_sh), out_shardings=out_sh), in_sh, out_sh
+
+
+def make_decode_step(
+    model: Model, mesh: Mesh, *, batch: int, max_len: int, seq_sharded: bool = False
+):
+    """One-token serve_step against a (possibly sequence-sharded) cache."""
+    cfg = model.cfg
+    pspecs = param_pspecs(_abstract_params(model), mesh)
+    params_sh = _named(mesh, pspecs)
+    acts = activation_specs(mesh, batch=batch, vocab=cfg.padded_vocab)
+    abstract_cache = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+    cache_specs = cache_specs_tree(abstract_cache, mesh, batch=batch, seq_sharded=seq_sharded)
+    cache_sh = _named(mesh, cache_specs)
+    token_sh = NamedSharding(mesh, acts["tokens"])
+
+    def decode(params, token, cache, cache_len):
+        with activation_sharding(mesh, batch=batch, vocab=cfg.padded_vocab):
+            return model.decode_step(params, token, cache, cache_len)
+
+    jitted = jax.jit(
+        decode,
+        in_shardings=(params_sh, token_sh, cache_sh, NamedSharding(mesh, P())),
+        out_shardings=(NamedSharding(mesh, acts["logits"]), cache_sh),
+        donate_argnums=(2,),
+    )
+    return jitted, (params_sh, token_sh, cache_sh), cache_sh
+
+
+# ---------------------------------------------------------------------------
+# Pure-DP shard_map step with int8 gradient compression (pod axis)
+# ---------------------------------------------------------------------------
+
+
+def int8_quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(tree: Params, axis: str) -> Params:
+    """int8-quantized psum: quantize locally, sum int32, dequantize.
+
+    Per-tensor scales are themselves psum-maxed so every shard dequantizes
+    identically; the quantization error stays bounded by the max-scale.
+    """
+
+    def one(x):
+        x32 = x.astype(jnp.float32)
+        scale = jax.lax.pmax(jnp.max(jnp.abs(x32)) / 127.0 + 1e-12, axis)
+        q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int32)
+        total = jax.lax.psum(q, axis)
+        return (total.astype(jnp.float32) * scale).astype(x.dtype)
+
+    return jax.tree.map(one, tree)
+
+
+def make_dp_compressed_step(
+    model: Model,
+    ocfg: opt.OptimizerConfig,
+    mesh: Mesh,
+    *,
+    compress: bool = True,
+    error_feedback: bool = True,
+):
+    """Data-parallel train step with explicit (optionally compressed)
+    gradient all-reduce over every mesh axis.  Params are replicated;
+    the batch is sharded over the leading axis."""
+    from jax.experimental.shard_map import shard_map
+
+    axes = mesh.axis_names
+    batch_spec = P(axes)
+
+    def step(params, opt_state, err, tokens, labels):
+        def loss_fn(p):
+            return model.loss(p, tokens, labels, remat=False)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        nd = 1
+        for a in axes:
+            nd *= mesh.shape[a]
+        if compress:
+            if error_feedback:
+                grads = jax.tree.map(lambda g, e: g + e.astype(g.dtype), grads, err)
+            summed = grads
+            for a in axes:
+                summed = compressed_psum(summed, a)
+            mean = jax.tree.map(lambda g: g / nd, summed)
+            # residual the compression error for the next step
+            new_err = jax.tree.map(
+                lambda g, s: (g - s / nd).astype(jnp.float32), grads, mean
+            ) if error_feedback else err
+            grads = mean
+        else:
+            for a in axes:
+                grads = jax.tree.map(lambda g: jax.lax.pmean(g, a), grads)
+            new_err = err
+        loss = jax.lax.pmean(loss, axes[0]) if axes else loss
+        new_params, new_state, metrics = opt.update(ocfg, grads, opt_state, params)
+        return new_params, new_state, new_err, dict(metrics, loss=loss)
+
+    rep = P()
+    rep_tree = lambda tree: jax.tree.map(lambda _: rep, tree)
+    abstract = _abstract_params(model)
+    in_specs = (
+        rep_tree(abstract),
+        opt.OptState(step=rep, m=rep_tree(abstract), v=rep_tree(abstract)),
+        rep_tree(abstract),
+        batch_spec,
+        batch_spec,
+    )
+    out_specs = (
+        rep_tree(abstract),
+        opt.OptState(step=rep, m=rep_tree(abstract), v=rep_tree(abstract)),
+        rep_tree(abstract),
+        {"lr": rep, "grad_norm": rep, "loss": rep},
+    )
+    mapped = shard_map(
+        step, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
+    return jax.jit(mapped)

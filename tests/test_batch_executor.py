@@ -1,0 +1,127 @@
+"""Differential testing of the batched (TPU-form) executor against the
+sequential oracle on the structural schema subset."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Validator, compile_schema
+from repro.core.batch_executor import BatchValidator
+from repro.core.tape import try_build_tape
+from repro.data.doc_table import encode_batch, encode_document
+
+# -- structural-subset schema strategy ----------------------------------------
+
+_keys = st.sampled_from(["a", "b", "name", "kind", "value", "tags", "n1"])
+
+
+def _subset_schemas(depth):
+    leaf = st.one_of(
+        st.builds(lambda t: {"type": t},
+                  st.sampled_from(["string", "integer", "number", "boolean", "null", "array", "object"])),
+        st.builds(lambda n: {"minimum": n}, st.integers(-5, 5)),
+        st.builds(lambda n: {"maximum": n}, st.integers(-5, 5)),
+        st.builds(lambda n: {"exclusiveMinimum": n}, st.integers(-5, 5)),
+        st.builds(lambda n: {"multipleOf": n}, st.sampled_from([1, 2, 0.5])),
+        st.builds(lambda n: {"minLength": n}, st.integers(0, 5)),
+        st.builds(lambda n: {"maxLength": n}, st.integers(0, 8)),
+        st.builds(lambda p: {"pattern": p}, st.sampled_from([".*", ".+", "^x-", "^.{2,4}$", "^ab$"])),
+        st.builds(lambda v: {"const": v},
+                  st.one_of(st.none(), st.booleans(), st.integers(-5, 5), st.text(max_size=6))),
+        st.builds(lambda v: {"enum": v},
+                  st.lists(st.one_of(st.integers(-3, 3), st.text(max_size=4)), min_size=1, max_size=3)),
+        st.builds(lambda n: {"minItems": n}, st.integers(0, 3)),
+        st.builds(lambda n: {"maxItems": n}, st.integers(0, 4)),
+        st.builds(lambda ks: {"required": ks}, st.lists(_keys, max_size=2, unique=True)),
+        st.builds(lambda n: {"minProperties": n}, st.integers(0, 2)),
+    )
+    if depth <= 0:
+        return leaf
+    sub = _subset_schemas(depth - 1)
+    return st.one_of(
+        leaf,
+        st.builds(lambda props: {"properties": props},
+                  st.dictionaries(_keys, sub, min_size=1, max_size=3)),
+        st.builds(lambda props, req: {"properties": props, "required": req,
+                                      "additionalProperties": False},
+                  st.dictionaries(_keys, sub, min_size=1, max_size=3),
+                  st.lists(_keys, max_size=1)),
+        st.builds(lambda props, ap: {"properties": props, "additionalProperties": ap},
+                  st.dictionaries(_keys, sub, min_size=1, max_size=2), sub),
+        st.builds(lambda s: {"items": s}, sub),
+        st.builds(lambda pre, tail: {"prefixItems": pre, "items": tail},
+                  st.lists(sub, min_size=1, max_size=2),
+                  st.one_of(st.just(False), sub)),
+    )
+
+
+subset_schemas = _subset_schemas(2)
+
+_doc_scalars = st.one_of(
+    st.none(), st.booleans(), st.integers(-8, 8),
+    st.sampled_from([0.5, 1.0, 2.5, -3.0, 4.4]),
+    st.text(max_size=6), st.sampled_from(["x-foo", "ab", "x" * 40]),
+)
+_docs = st.recursive(
+    _doc_scalars,
+    lambda c: st.one_of(
+        st.lists(c, max_size=4),
+        st.dictionaries(_keys, c, max_size=4),
+    ),
+    max_leaves=12,
+)
+
+
+@settings(max_examples=200, deadline=None)
+@given(schema=subset_schemas, docs=st.lists(_docs, min_size=1, max_size=6))
+def test_batch_matches_sequential(schema, docs):
+    compiled = compile_schema(schema)
+    tape, reason = try_build_tape(compiled)
+    if tape is None:
+        return  # outside the structural subset: sequential fallback
+    seq = Validator(compiled)
+    expected = [seq.is_valid(d) for d in docs]
+    table = encode_batch(docs, max_nodes=64, max_depth=8)
+    bv = BatchValidator(tape, max_depth=8, use_pallas=False)
+    valid, decided = bv.validate(table)
+    for i, (v, d) in enumerate(zip(valid, decided)):
+        if d:
+            assert bool(v) == expected[i], (schema, docs[i])
+
+
+@settings(max_examples=10, deadline=None)
+@given(schema=subset_schemas, docs=st.lists(_docs, min_size=1, max_size=3))
+def test_batch_pallas_path_matches_jnp(schema, docs):
+    compiled = compile_schema(schema)
+    tape, _ = try_build_tape(compiled)
+    if tape is None:
+        return
+    table = encode_batch(docs, max_nodes=64, max_depth=8)
+    v1, _ = BatchValidator(tape, max_depth=8, use_pallas=False).validate(table)
+    v2, _ = BatchValidator(tape, max_depth=8, use_pallas=True).validate(table)
+    np.testing.assert_array_equal(v1, v2)
+
+
+class TestEncoder:
+    def test_node_budget_overflow(self):
+        doc = {"k%d" % i: i for i in range(100)}
+        assert encode_document(doc, max_nodes=16) is None
+
+    def test_depth_budget_overflow(self):
+        doc = [[[[[1]]]]]
+        assert encode_document(doc, max_nodes=64, max_depth=3) is None
+
+    def test_bfs_children_contiguous(self):
+        doc = {"a": [1, 2], "b": {"c": 3}}
+        cols = encode_document(doc, max_nodes=16)
+        # root=0, a=1, b=2, then a's items 3,4, then b's child 5
+        assert cols["child_start"][0] == 1
+        assert cols["child_start"][1] == 3
+        assert cols["child_start"][2] == 5
+        assert cols["parent"][3] == 1 and cols["parent"][4] == 1
+        assert cols["parent"][5] == 2
+
+    def test_overflow_marks_undecided(self):
+        docs = [{"a": 1}, {"k%d" % i: i for i in range(100)}]
+        table = encode_batch(docs, max_nodes=8)
+        assert table.ok.tolist() == [True, False]

@@ -1,0 +1,38 @@
+"""The codegen (closure-compiled) engine must agree with the interpreter
+on the full conformance corpus and on random schema/document pairs."""
+
+import pytest
+from hypothesis import given, settings
+
+from repro.core import NaiveValidator, Validator, compile_schema
+
+try:  # pytest inserts tests/ on sys.path (no package); PYTHONPATH=. gives tests.*
+    from test_conformance import CASES
+    from test_differential import json_docs, schemas
+except ImportError:  # pragma: no cover
+    from tests.test_conformance import CASES
+    from tests.test_differential import json_docs, schemas
+
+
+@pytest.mark.parametrize("name,schema,docs", CASES, ids=[c[0] for c in CASES])
+def test_codegen_conformance(name, schema, docs):
+    v = Validator(compile_schema(schema), engine="codegen")
+    for doc, expected in docs:
+        assert v.is_valid(doc) is expected, f"{name}: doc={doc!r} expected={expected}"
+
+
+@settings(max_examples=300, deadline=None)
+@given(schema=schemas, doc=json_docs)
+def test_codegen_matches_interpreter(schema, doc):
+    compiled = compile_schema(schema)
+    interp = Validator(compiled)
+    cg = Validator(compiled, engine="codegen")
+    assert interp.is_valid(doc) is cg.is_valid(doc), (schema, doc)
+
+
+@settings(max_examples=100, deadline=None)
+@given(schema=schemas, doc=json_docs)
+def test_codegen_matches_naive(schema, doc):
+    cg = Validator(compile_schema(schema), engine="codegen")
+    naive = NaiveValidator(schema)
+    assert cg.is_valid(doc) is naive.is_valid(doc), (schema, doc)

@@ -1,0 +1,374 @@
+"""Spec-conformance corpus (offline stand-in for the official
+JSON-Schema-Test-Suite, Blaze §6.1).
+
+Each case is (name, schema, [(document, expected_valid), ...]).  Every case
+is checked against BOTH the compiled executor and the naive interpreter,
+and with every optimization disabled one at a time -- optimizations must
+never change semantics.
+"""
+
+import pytest
+
+from repro.core import CompilerOptions, NaiveValidator, Validator, compile_schema
+
+D2020 = "https://json-schema.org/draft/2020-12/schema"
+D7 = "http://json-schema.org/draft-07/schema#"
+D4 = "http://json-schema.org/draft-04/schema#"
+
+
+def s2020(**kw):
+    return {"$schema": D2020, **kw}
+
+
+CASES = [
+    # ---------------- type ----------------
+    ("type string", s2020(type="string"), [
+        ("foo", True), ("", True), (1, False), (1.5, False), (None, False),
+        (True, False), ([], False), ({}, False),
+    ]),
+    ("type integer accepts 1.0", s2020(type="integer"), [
+        (1, True), (1.0, True), (1.5, False), ("1", False), (True, False),
+    ]),
+    ("type number", s2020(type="number"), [
+        (1, True), (1.5, True), ("1", False), (True, False),
+    ]),
+    ("type boolean excludes ints", s2020(type="boolean"), [
+        (True, True), (False, True), (0, False), (1, False),
+    ]),
+    ("type null", s2020(type="null"), [(None, True), (0, False), (False, False)]),
+    ("type array", s2020(type="array"), [([], True), ([1], True), ({}, False)]),
+    ("type object", s2020(type="object"), [({}, True), ([], False)]),
+    ("type union", s2020(type=["string", "number"]), [
+        ("a", True), (3, True), (3.5, True), (None, False), (True, False),
+    ]),
+    # ---------------- const / enum ----------------
+    ("const number cross-type", s2020(const=1), [
+        (1, True), (1.0, True), (True, False), ("1", False), (2, False),
+    ]),
+    ("const object", s2020(const={"a": [1, 2]}), [
+        ({"a": [1, 2]}, True), ({"a": [1, 2.0]}, True), ({"a": [2, 1]}, False), ({}, False),
+    ]),
+    ("enum", s2020(enum=["red", "green", 3, None]), [
+        ("red", True), (3, True), (3.0, True), (None, True), ("blue", False), (True, False),
+    ]),
+    ("enum bool vs int", s2020(enum=[0, 1]), [
+        (0, True), (1, True), (False, False), (True, False),
+    ]),
+    # ---------------- numbers ----------------
+    ("minimum", s2020(minimum=1.1), [
+        (1.1, True), (2, True), (1, False), ("x", True), (None, True),
+    ]),
+    ("exclusiveMinimum", s2020(exclusiveMinimum=1.1), [
+        (1.2, True), (1.1, False), (1, False),
+    ]),
+    ("maximum", s2020(maximum=3.0), [(3.0, True), (3, True), (3.5, False)]),
+    ("exclusiveMaximum", s2020(exclusiveMaximum=3.0), [(2.9, True), (3.0, False)]),
+    ("min and max", s2020(minimum=0, maximum=10), [
+        (0, True), (10, True), (5.5, True), (-1, False), (11, False),
+    ]),
+    ("multipleOf int", s2020(multipleOf=2), [
+        (4, True), (0, True), (-6, True), (7, False), (4.5, False), ("x", True),
+    ]),
+    ("multipleOf fraction", s2020(multipleOf=0.5), [
+        (1.5, True), (1.25, False),
+    ]),
+    # ---------------- strings ----------------
+    ("minLength", s2020(minLength=2), [
+        ("ab", True), ("a", False), ("", False), (1, True),
+    ]),
+    ("maxLength", s2020(maxLength=2), [("ab", True), ("abc", False)]),
+    ("pattern search semantics", s2020(pattern="b.b"), [
+        ("bab", True), ("xxbabxx", True), ("bb", False), (5, True),
+    ]),
+    ("pattern anchored prefix", s2020(pattern="^x-"), [
+        ("x-foo", True), ("ax-foo", False), ("x", False),
+    ]),
+    ("pattern dot-all elision", s2020(pattern=".*"), [("", True), ("anything", True)]),
+    ("pattern non-empty", s2020(pattern=".+"), [("", False), ("a", True)]),
+    ("pattern length range", s2020(pattern="^.{3,5}$"), [
+        ("abc", True), ("abcde", True), ("ab", False), ("abcdef", False),
+    ]),
+    ("pattern exact literal", s2020(pattern="^foo$"), [("foo", True), ("foox", False)]),
+    ("pattern suffix", s2020(pattern="-x$"), [("foo-x", True), ("foo-xy", False)]),
+    ("pattern contains literal", s2020(pattern="oo"), [("book", True), ("bok", False)]),
+    # ---------------- objects ----------------
+    ("required", s2020(required=["a", "b"]), [
+        ({"a": 1, "b": 2}, True), ({"a": 1}, False), ({}, False), ([], True), ("x", True),
+    ]),
+    ("minProperties", s2020(minProperties=1), [({"a": 1}, True), ({}, False)]),
+    ("maxProperties", s2020(maxProperties=1), [({"a": 1}, True), ({"a": 1, "b": 2}, False)]),
+    ("properties", s2020(properties={"a": {"type": "integer"}}), [
+        ({"a": 1}, True), ({"a": "x"}, False), ({}, True), ({"b": "x"}, True),
+    ]),
+    ("properties false schema", s2020(properties={"a": False}), [
+        ({}, True), ({"b": 1}, True), ({"a": 1}, False),
+    ]),
+    ("patternProperties", s2020(patternProperties={"^S_": {"type": "string"}}), [
+        ({"S_0": "x"}, True), ({"S_0": 1}, False), ({"other": 1}, True),
+    ]),
+    ("properties + patternProperties both apply",
+     s2020(properties={"foo": {"minimum": 0}}, patternProperties={"f.o": {"maximum": 10}}), [
+        ({"foo": 5}, True), ({"foo": -1}, False), ({"foo": 11}, False),
+    ]),
+    ("additionalProperties false", s2020(
+        properties={"a": {}}, patternProperties={"^x": {}}, additionalProperties=False), [
+        ({"a": 1}, True), ({"x1": 1}, True), ({"b": 1}, False), ({}, True),
+    ]),
+    ("additionalProperties schema", s2020(
+        properties={"a": {}}, additionalProperties={"type": "integer"}), [
+        ({"a": "s", "b": 1}, True), ({"b": "s"}, False),
+    ]),
+    ("additionalProperties alone", s2020(additionalProperties={"type": "boolean"}), [
+        ({"x": True}, True), ({"x": 1}, False), ({}, True),
+    ]),
+    ("propertyNames", s2020(propertyNames={"maxLength": 3}), [
+        ({"abc": 1}, True), ({"abcd": 1}, False), ({}, True),
+    ]),
+    ("propertyNames false", s2020(propertyNames=False), [
+        ({}, True), ({"a": 1}, False),
+    ]),
+    ("dependentRequired", s2020(dependentRequired={"a": ["b"]}), [
+        ({"a": 1, "b": 2}, True), ({"a": 1}, False), ({"b": 2}, True), ({}, True),
+    ]),
+    ("dependentSchemas", s2020(dependentSchemas={"a": {"required": ["b"]}}), [
+        ({"a": 1, "b": 2}, True), ({"a": 1}, False), ({"c": 3}, True),
+    ]),
+    # ---------------- arrays ----------------
+    ("minItems/maxItems", s2020(minItems=1, maxItems=2), [
+        ([1], True), ([1, 2], True), ([], False), ([1, 2, 3], False),
+    ]),
+    ("uniqueItems", s2020(uniqueItems=True), [
+        ([1, 2], True), ([1, 1], False), ([1, 1.0], False), ([0, False], True),
+        ([{"a": 1}, {"a": 1}], False), ([{"a": 1}, {"a": 2}], True),
+        ([[1], [1]], False), ([], True),
+    ]),
+    ("items schema", s2020(items={"type": "integer"}), [
+        ([1, 2], True), ([1, "x"], False), ([], True),
+    ]),
+    ("prefixItems", s2020(prefixItems=[{"type": "integer"}, {"type": "string"}]), [
+        ([1, "a"], True), ([1], True), (["a"], False), ([1, 2], False), ([1, "a", None], True),
+    ]),
+    ("prefixItems + items", s2020(
+        prefixItems=[{"type": "integer"}], items={"type": "string"}), [
+        ([1, "a", "b"], True), ([1, "a", 2], False), ([1], True),
+    ]),
+    ("items false closes array", s2020(prefixItems=[{}], items=False), [
+        ([1], True), ([], True), ([1, 2], False),
+    ]),
+    ("contains", s2020(contains={"type": "integer"}), [
+        (["a", 1], True), (["a"], False), ([], False),
+    ]),
+    ("minContains/maxContains", s2020(contains={"type": "integer"}, minContains=2, maxContains=3), [
+        ([1, 2], True), ([1, 2, 3], True), ([1], False), ([1, 2, 3, 4], False),
+        ([1, "a", 2], True),
+    ]),
+    ("minContains zero", s2020(contains={"type": "integer"}, minContains=0), [
+        ([], True), (["a"], True),
+    ]),
+    ("contains true as size", s2020(contains=True, minContains=2), [
+        ([1, 2], True), ([1], False),
+    ]),
+    # ---------------- logical ----------------
+    ("allOf", s2020(allOf=[{"minimum": 0}, {"maximum": 10}]), [
+        (5, True), (-1, False), (11, False),
+    ]),
+    ("anyOf", s2020(anyOf=[{"type": "string"}, {"minimum": 5}]), [
+        ("x", True), (6, True), (3, False),
+    ]),
+    ("oneOf exactly one", s2020(oneOf=[{"minimum": 0}, {"maximum": 10}]), [
+        (-5, True), (15, True), (5, False),
+    ]),
+    ("not", s2020(**{"not": {"type": "string"}}), [(1, True), ("x", False)]),
+    ("not false always passes", s2020(**{"not": False}), [(1, True), ("x", True)]),
+    ("not true always fails", s2020(**{"not": True}), [(1, False)]),
+    ("if/then/else", s2020(**{
+        "if": {"type": "integer"}, "then": {"minimum": 0}, "else": {"minLength": 2}}), [
+        (5, True), (-5, False), ("ab", True), ("a", False), (None, True),
+    ]),
+    ("if/then only", s2020(**{"if": {"type": "integer"}, "then": {"minimum": 0}}), [
+        (5, True), (-5, False), ("x", True),
+    ]),
+    ("then without if ignored", s2020(**{"then": {"minimum": 0}}), [(-5, True)]),
+    ("if with required CISC", s2020(**{
+        "if": {"required": ["a"]}, "then": {"required": ["b"]}}), [
+        ({"a": 1, "b": 2}, True), ({"a": 1}, False), ({"c": 1}, True), (3, True),
+    ]),
+    ("nested oneOf unroll", s2020(oneOf=[
+        {"properties": {"kind": {"const": "a"}, "v": {"type": "integer"}}, "required": ["kind"]},
+        {"properties": {"kind": {"const": "b"}, "v": {"type": "string"}}, "required": ["kind"]},
+    ]), [
+        ({"kind": "a", "v": 1}, True), ({"kind": "b", "v": "s"}, True),
+        ({"kind": "a", "v": "s"}, False), ({}, False),
+    ]),
+    # ---------------- $ref ----------------
+    ("ref to defs", s2020(**{
+        "$defs": {"positive": {"minimum": 0}},
+        "properties": {"a": {"$ref": "#/$defs/positive"}}}), [
+        ({"a": 1}, True), ({"a": -1}, False),
+    ]),
+    ("ref with escaping", s2020(**{
+        "$defs": {"a/b": {"type": "integer"}, "c~d": {"type": "string"}},
+        "properties": {
+            "x": {"$ref": "#/$defs/a~1b"},
+            "y": {"$ref": "#/$defs/c~0d"}}}), [
+        ({"x": 1, "y": "s"}, True), ({"x": "s"}, False), ({"y": 1}, False),
+    ]),
+    ("recursive ref tree", s2020(**{
+        "type": "object",
+        "properties": {
+            "value": {"type": "integer"},
+            "children": {"type": "array", "items": {"$ref": "#"}}},
+        "required": ["value"]}), [
+        ({"value": 1}, True),
+        ({"value": 1, "children": [{"value": 2}, {"value": 3, "children": []}]}, True),
+        ({"value": 1, "children": [{"value": "x"}]}, False),
+        ({"value": 1, "children": [{"children": []}]}, False),
+    ]),
+    ("ref repeated many times labels", s2020(**{
+        "$defs": {"t": {"type": "integer"}},
+        "properties": {k: {"$ref": "#/$defs/t"} for k in "abcdefgh"}}), [
+        ({"a": 1, "h": 2}, True), ({"a": "x"}, False),
+    ]),
+    ("anchor ref", s2020(**{
+        "$defs": {"x": {"$anchor": "pos", "minimum": 0}},
+        "properties": {"a": {"$ref": "#pos"}}}), [
+        ({"a": 3}, True), ({"a": -3}, False),
+    ]),
+    ("dynamicRef single context", s2020(**{
+        "$defs": {"x": {"$dynamicAnchor": "T", "type": "integer"}},
+        "properties": {"a": {"$dynamicRef": "#T"}}}), [
+        ({"a": 3}, True), ({"a": "s"}, False),
+    ]),
+    # ---------------- unevaluated* ----------------
+    ("unevaluatedProperties false static", s2020(
+        properties={"a": {}}, unevaluatedProperties=False), [
+        ({"a": 1}, True), ({"b": 1}, False),
+    ]),
+    ("unevaluatedProperties schema", s2020(
+        properties={"a": {}}, unevaluatedProperties={"type": "integer"}), [
+        ({"a": "s", "b": 1}, True), ({"b": "s"}, False),
+    ]),
+    ("unevaluatedProperties sees through allOf", s2020(
+        allOf=[{"properties": {"city": {"type": "string"}}}],
+        properties={"name": {"type": "string"}},
+        unevaluatedProperties=False), [
+        ({"name": "bob", "city": "dc"}, True), ({"zip": "x"}, False),
+    ]),
+    ("unevaluatedProperties with anyOf branches", s2020(
+        anyOf=[
+            {"required": ["a"], "properties": {"a": {"type": "integer"}}},
+            {"required": ["b"], "properties": {"b": {"type": "integer"}}},
+        ],
+        unevaluatedProperties=False), [
+        ({"a": 1}, True), ({"b": 1}, True), ({"a": 1, "b": 1}, True),
+        ({"a": 1, "c": 1}, False),
+    ]),
+    ("unevaluatedProperties if/then", s2020(**{
+        "if": {"required": ["kind"], "properties": {"kind": {"const": "x"}}},
+        "then": {"properties": {"payload": {}}},
+        "properties": {"kind": {}},
+        "unevaluatedProperties": False}), [
+        ({"kind": "x", "payload": 1}, True),
+        ({"kind": "y", "payload": 1}, False),
+        ({"kind": "y"}, True),
+    ]),
+    ("unevaluatedItems static prefix", s2020(
+        prefixItems=[{"type": "integer"}], unevaluatedItems=False), [
+        ([1], True), ([1, 2], False), ([], True),
+    ]),
+    ("unevaluatedItems schema", s2020(
+        prefixItems=[{"type": "integer"}], unevaluatedItems={"type": "string"}), [
+        ([1, "a"], True), ([1, 2], False),
+    ]),
+    ("unevaluatedItems sees through allOf", s2020(
+        allOf=[{"prefixItems": [{"type": "integer"}, {"type": "integer"}]}],
+        unevaluatedItems=False), [
+        ([1, 2], True), ([1, 2, 3], False),
+    ]),
+    ("unevaluatedItems with contains", s2020(
+        contains={"type": "integer"}, unevaluatedItems={"type": "string"}), [
+        ([1, "a"], True), ([1, None], False), (["a", 1, "b"], True),
+    ]),
+    # ---------------- misc / interactions ----------------
+    ("deeply nested", s2020(properties={"a": {"properties": {"b": {"properties": {
+        "c": {"type": "integer", "minimum": 0}}}}}}), [
+        ({"a": {"b": {"c": 1}}}, True), ({"a": {"b": {"c": -1}}}, False),
+        ({"a": {"b": {}}}, True), ({"a": 3}, True),
+    ]),
+    ("empty schema", s2020(), [(1, True), (None, True), ({"x": [1]}, True)]),
+    ("false schema via not true", s2020(**{"not": {}}), [(1, False), ({}, False)]),
+    ("heterogeneous doc", s2020(
+        type="object",
+        properties={
+            "tags": {"type": "array", "items": {"type": "string"}, "uniqueItems": True},
+            "meta": {"type": "object", "additionalProperties": {"type": "number"}},
+        }), [
+        ({"tags": ["a", "b"], "meta": {"x": 1.5}}, True),
+        ({"tags": ["a", "a"]}, False),
+        ({"meta": {"x": "s"}}, False),
+    ]),
+    # ---------------- draft-7 ----------------
+    ("draft7 items array form", {"$schema": D7, "items": [
+        {"type": "integer"}, {"type": "string"}], "additionalItems": {"type": "boolean"}}, [
+        ([1, "a", True], True), ([1, "a", 1], False), ([1], True), (["a"], False),
+    ]),
+    ("draft7 additionalItems false", {"$schema": D7, "items": [{}], "additionalItems": False}, [
+        ([1], True), ([1, 2], False),
+    ]),
+    ("draft7 dependencies mixed", {"$schema": D7, "dependencies": {
+        "a": ["b"], "c": {"required": ["d"]}}}, [
+        ({"a": 1, "b": 2}, True), ({"a": 1}, False),
+        ({"c": 1, "d": 2}, True), ({"c": 1}, False), ({}, True),
+    ]),
+    ("draft7 definitions ref", {"$schema": D7, "definitions": {"t": {"type": "integer"}},
+     "properties": {"a": {"$ref": "#/definitions/t"}}}, [
+        ({"a": 1}, True), ({"a": "x"}, False),
+    ]),
+    # ---------------- draft-4 ----------------
+    ("draft4 exclusiveMinimum boolean", {"$schema": D4, "minimum": 5, "exclusiveMinimum": True}, [
+        (6, True), (5, False),
+    ]),
+    ("draft4 inclusive default", {"$schema": D4, "minimum": 5}, [(5, True), (4, False)]),
+]
+
+
+@pytest.mark.parametrize("name,schema,docs", CASES, ids=[c[0] for c in CASES])
+def test_conformance_compiled(name, schema, docs):
+    v = Validator(compile_schema(schema))
+    for doc, expected in docs:
+        assert v.is_valid(doc) is expected, f"{name}: doc={doc!r} expected={expected}"
+
+
+@pytest.mark.parametrize("name,schema,docs", CASES, ids=[c[0] for c in CASES])
+def test_conformance_interpreter(name, schema, docs):
+    v = NaiveValidator(schema)
+    for doc, expected in docs:
+        assert v.is_valid(doc) is expected, f"{name}: doc={doc!r} expected={expected}"
+
+
+_ABLATIONS = {
+    "no_unroll": CompilerOptions(unroll=False),
+    "no_regex": CompilerOptions(regex_specialize=False),
+    "no_reorder": CompilerOptions(reorder=False),
+    "no_cisc": CompilerOptions(cisc=False),
+    "no_elide": CompilerOptions(elide=False),
+    "all_off": CompilerOptions(
+        unroll=False, regex_specialize=False, reorder=False, cisc=False, elide=False
+    ),
+}
+
+
+@pytest.mark.parametrize("ablation", list(_ABLATIONS), ids=list(_ABLATIONS))
+@pytest.mark.parametrize("name,schema,docs", CASES, ids=[c[0] for c in CASES])
+def test_conformance_ablations_semantics_preserved(ablation, name, schema, docs):
+    """Optimizations must never change validation results (§3.5)."""
+    v = Validator(compile_schema(schema, options=_ABLATIONS[ablation]))
+    for doc, expected in docs:
+        assert v.is_valid(doc) is expected, f"{name}[{ablation}]: doc={doc!r}"
+
+
+@pytest.mark.parametrize("name,schema,docs", CASES, ids=[c[0] for c in CASES])
+def test_conformance_hash_ablation(name, schema, docs):
+    v = Validator(compile_schema(schema), use_hashing=False)
+    for doc, expected in docs:
+        assert v.is_valid(doc) is expected, f"{name}[no-hash]: doc={doc!r}"

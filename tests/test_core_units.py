@@ -1,0 +1,311 @@
+"""Unit + property tests for core internals: semi-perfect hashing (§4.1),
+regex specialization (§4.3), compiler heuristics (§4.2/§4.4), CISC fusion
+(§2.5) and static elision (§3.1.1)."""
+
+import re
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CompilerOptions, compile_schema
+from repro.core.hashing import (
+    SHORT_LIMIT,
+    hash_lanes,
+    hashed_equal,
+    is_short_hash,
+    lanes_to_int,
+    shash,
+    shash_bytes,
+)
+from repro.core.instructions import (
+    ArrayPrefix,
+    AssertionArraySizeLess,
+    AssertionEqual,
+    AssertionNumberBounds,
+    AssertionStringBounds,
+    AssertionStringSizeGreater,
+    AssertionType,
+    ControlJump,
+    ControlLabel,
+    LoopPropertiesMatch,
+    LoopPropertiesMatchClosed,
+    OpCode,
+    WhenDefines,
+    WhenType,
+    walk,
+)
+from repro.core.regex_opt import RegexKind, analyze_pattern
+
+
+# ---------------------------------------------------------------------------
+# Hashing (§4.1)
+# ---------------------------------------------------------------------------
+
+
+class TestSemiPerfectHash:
+    @given(st.text(max_size=60))
+    def test_hash_is_deterministic(self, s):
+        assert shash(s) == shash(s)
+
+    @given(st.text(max_size=10), st.text(max_size=10))
+    def test_short_strings_perfect(self, a, b):
+        """Hash equality is string equality for short strings (one-to-one)."""
+        if len(a.encode()) <= SHORT_LIMIT and len(b.encode()) <= SHORT_LIMIT:
+            assert (shash(a) == shash(b)) == (a == b)
+
+    @given(st.binary(min_size=0, max_size=SHORT_LIMIT))
+    def test_short_discriminator_zero(self, data):
+        assert is_short_hash(shash_bytes(data))
+
+    @given(st.binary(min_size=SHORT_LIMIT + 1, max_size=200))
+    def test_long_discriminator_nonzero(self, data):
+        h = shash_bytes(data)
+        assert not is_short_hash(h)
+        # constant-time digest: depends only on len, first, last byte
+        digest = (len(data) + data[0] + data[-1]) % 255 + 1
+        assert (h >> 248) == digest
+
+    @given(st.text(max_size=64), st.text(max_size=64))
+    def test_hashed_equal_matches_string_equal(self, a, b):
+        assert hashed_equal(shash(a), a, shash(b), b) == (a == b)
+
+    @given(st.text(max_size=64))
+    def test_lane_roundtrip(self, s):
+        h = shash(s)
+        lanes = hash_lanes(h)
+        assert lanes.shape == (8,)
+        assert lanes_to_int(lanes) == h
+
+    def test_paper_collision_example(self):
+        """Same length + same first/last char => same (1-byte) digest."""
+        a = "a" + "x" * 30 + "z"  # 32 bytes
+        b = "a" + "y" * 30 + "z"
+        assert len(a) == len(b) == 32
+        assert shash(a) == shash(b)  # collision by construction
+        assert not hashed_equal(shash(a), a, shash(b), b)  # resolved by compare
+
+
+# ---------------------------------------------------------------------------
+# Regex specialization (§4.3)
+# ---------------------------------------------------------------------------
+
+
+class TestRegexSpecialization:
+    @pytest.mark.parametrize(
+        "pattern,kind",
+        [
+            (".*", RegexKind.ALL),
+            ("^.*$", RegexKind.ALL),
+            (".+", RegexKind.NON_EMPTY),
+            ("^.+$", RegexKind.NON_EMPTY),
+            ("^.{3,5}$", RegexKind.LENGTH_RANGE),
+            ("^.{3,}$", RegexKind.LENGTH_RANGE),
+            ("^.{4}$", RegexKind.LENGTH_RANGE),
+            ("^x-", RegexKind.PREFIX),
+            ("^foo$", RegexKind.EXACT),
+            ("-x$", RegexKind.SUFFIX),
+            ("abc", RegexKind.CONTAINS),
+            ("a|b", RegexKind.GENERIC),
+            ("[0-9]+", RegexKind.GENERIC),
+            ("^x-.*cfg$", RegexKind.GENERIC),
+        ],
+    )
+    def test_classification(self, pattern, kind):
+        assert analyze_pattern(pattern).kind is kind
+
+    @pytest.mark.parametrize(
+        "pattern",
+        [".*", ".+", "^.{3,5}$", "^.{2,}$", "^.{4}$", "^x-", "^foo$", "-x$", "abc", "a|b"],
+    )
+    @given(s=st.text(max_size=20))
+    @settings(max_examples=60, deadline=None)
+    def test_plan_equals_engine(self, pattern, s):
+        """Specialized plans must agree with the real regex engine."""
+        plan = analyze_pattern(pattern)
+        expected = re.search(pattern, s, re.DOTALL) is not None
+        assert plan.matches(s) == expected
+
+    def test_disabled_forces_engine(self):
+        assert analyze_pattern(".*", enabled=False).kind is RegexKind.GENERIC
+
+
+# ---------------------------------------------------------------------------
+# Compiler heuristics (§4.2 unrolling, §3.3 ref inlining)
+# ---------------------------------------------------------------------------
+
+
+def _ops(compiled):
+    return [type(i).__name__ for i in compiled.instructions]
+
+
+class TestUnrollHeuristics:
+    def test_few_properties_unrolled(self):
+        """<=5 properties -> per-key instructions, no loop (§4.2)."""
+        schema = {"properties": {k: {"type": "integer"} for k in "abcde"}}
+        c = compile_schema(schema)
+        assert not any(isinstance(i, LoopPropertiesMatch) for i in c.instructions)
+        typed = [i for i in c.instructions if isinstance(i, AssertionType)]
+        assert {i.rel_path for i in typed} == {(k,) for k in "abcde"}
+
+    def test_many_optional_properties_looped(self):
+        """>5 properties, none required -> LoopPropertiesMatch."""
+        schema = {"properties": {f"k{i}": {"type": "integer"} for i in range(10)}}
+        c = compile_schema(schema)
+        assert any(isinstance(i, LoopPropertiesMatch) for i in c.instructions)
+
+    def test_quarter_required_unrolls(self):
+        """>=1/4 of properties required -> unroll even when many (§4.2)."""
+        schema = {
+            "properties": {f"k{i}": {"type": "integer"} for i in range(8)},
+            "required": ["k0", "k1"],
+        }
+        c = compile_schema(schema)
+        assert not any(isinstance(i, LoopPropertiesMatch) for i in c.instructions)
+
+    def test_unroll_disabled(self):
+        schema = {"properties": {"a": {"type": "integer"}}}
+        c = compile_schema(schema, options=CompilerOptions(unroll=False))
+        assert any(isinstance(i, LoopPropertiesMatch) for i in c.instructions)
+
+    def test_oneof_branches_always_unroll(self):
+        """properties directly under oneOf always unroll (§4.2)."""
+        schema = {
+            "oneOf": [
+                {"properties": {f"k{i}": {"type": "integer"} for i in range(10)}},
+                {"type": "string"},
+            ]
+        }
+        c = compile_schema(schema)
+        xor = next(i for i in c.instructions if i.op is OpCode.XOR)
+        assert not any(
+            isinstance(i, LoopPropertiesMatch) for grp in xor.groups for i in grp
+        )
+
+
+class TestRefHandling:
+    def test_few_refs_inlined(self):
+        schema = {
+            "$defs": {"t": {"type": "integer"}},
+            "properties": {"a": {"$ref": "#/$defs/t"}, "b": {"$ref": "#/$defs/t"}},
+        }
+        c = compile_schema(schema)
+        all_insts = list(walk(c.instructions))
+        assert not any(isinstance(i, (ControlLabel, ControlJump)) for i in all_insts)
+        assert not c.labels
+
+    def test_many_refs_labelled(self):
+        schema = {
+            "$defs": {"t": {"type": "integer"}},
+            "properties": {f"k{i}": {"$ref": "#/$defs/t"} for i in range(7)},
+        }
+        c = compile_schema(schema)
+        all_insts = list(walk(c.instructions))
+        labels = [i for i in all_insts if isinstance(i, ControlLabel)]
+        jumps = [i for i in all_insts if isinstance(i, ControlJump)]
+        assert len(labels) == 1 and len(jumps) == 6
+        assert c.labels[labels[0].label] == labels[0].children
+
+    def test_recursive_ref_always_labelled(self):
+        schema = {"properties": {"next": {"$ref": "#"}}}
+        c = compile_schema(schema)
+        all_insts = list(walk(c.instructions))
+        assert any(isinstance(i, ControlJump) for i in all_insts) or c.labels
+
+
+class TestCiscFusion:
+    def test_string_bounds_fused(self):
+        schema = {"type": "string", "minLength": 2, "maxLength": 5}
+        c = compile_schema(schema)
+        assert any(isinstance(i, AssertionStringBounds) for i in c.instructions)
+
+    def test_number_bounds_fused(self):
+        schema = {"minimum": 0, "maximum": 10}
+        c = compile_schema(schema)
+        assert any(isinstance(i, AssertionNumberBounds) for i in c.instructions)
+
+    def test_singleton_enum_becomes_equal(self):
+        c = compile_schema({"enum": ["only"]})
+        assert any(isinstance(i, AssertionEqual) for i in c.instructions)
+
+    def test_dependent_schemas_when_defines(self):
+        c = compile_schema({"dependentSchemas": {"a": {"required": ["b"]}}})
+        assert any(isinstance(i, WhenDefines) for i in c.instructions)
+
+    def test_if_type_becomes_when_type(self):
+        c = compile_schema({"if": {"type": "integer"}, "then": {"minimum": 0}})
+        assert any(isinstance(i, WhenType) for i in c.instructions)
+
+    def test_cisc_disabled(self):
+        c = compile_schema(
+            {"minimum": 0, "maximum": 10}, options=CompilerOptions(cisc=False)
+        )
+        assert not any(isinstance(i, AssertionNumberBounds) for i in c.instructions)
+
+
+class TestStaticElision:
+    def test_numeric_assertion_elided_for_string_type(self):
+        """§3.1.1: minimum is redundant when type != number."""
+        c = compile_schema({"type": "string", "minimum": 5})
+        ops = {i.op for i in walk(c.instructions)}
+        assert OpCode.GREATER_EQUAL not in ops and OpCode.NUMBER_BOUNDS not in ops
+
+    def test_elision_disabled_keeps_assertion(self):
+        c = compile_schema(
+            {"type": "string", "minimum": 5}, options=CompilerOptions(elide=False)
+        )
+        ops = {i.op for i in walk(c.instructions)}
+        assert OpCode.GREATER_EQUAL in ops
+
+    def test_mincontains_zero_no_instructions(self):
+        c = compile_schema({"contains": {"type": "integer"}, "minContains": 0})
+        assert len(c.instructions) == 0
+
+    def test_contains_true_becomes_size_check(self):
+        c = compile_schema({"contains": True, "minContains": 2})
+        assert any(i.op is OpCode.ARRAY_SIZE_GREATER for i in c.instructions)
+
+    def test_items_false_becomes_size_check(self):
+        c = compile_schema({"prefixItems": [{}], "items": False})
+        assert any(isinstance(i, AssertionArraySizeLess) for i in c.instructions)
+
+    def test_additional_properties_true_no_instructions(self):
+        c = compile_schema({"additionalProperties": True})
+        assert len(c.instructions) == 0
+
+    def test_unevaluated_true_no_instructions(self):
+        c = compile_schema({"unevaluatedProperties": True})
+        assert len(c.instructions) == 0
+
+
+class TestReordering:
+    def test_cheap_before_expensive(self):
+        """String length checks before regex (§3.1: fail fast on cheap ops)."""
+        schema = {"type": "string", "pattern": "a|b", "minLength": 2}
+        c = compile_schema(schema)
+        names = _ops(c)
+        assert names.index("AssertionStringSizeGreater") < names.index("AssertionRegex")
+
+    def test_reorder_disabled_keeps_source_order(self):
+        schema = {"pattern": "a|b", "minLength": 2}
+        c = compile_schema(schema, options=CompilerOptions(reorder=False))
+        names = _ops(c)
+        # compiler emits length before pattern structurally; with reorder off
+        # order is the emission order, stable regardless of cost
+        assert "AssertionRegex" in names
+
+    def test_closed_properties_compiles_to_match_closed(self):
+        c = compile_schema(
+            {"properties": {"a": {}}, "additionalProperties": False}
+        )
+        assert any(isinstance(i, LoopPropertiesMatchClosed) for i in c.instructions)
+
+
+class TestInstructionCounts:
+    def test_instruction_count_reported(self):
+        c = compile_schema({"properties": {"a": {"type": "string"}}})
+        assert c.instruction_count() >= 1
+
+    def test_prefix_items_groups(self):
+        c = compile_schema({"prefixItems": [{"type": "integer"}, {"type": "string"}]})
+        ap = next(i for i in c.instructions if isinstance(i, ArrayPrefix))
+        assert len(ap.groups) == 2

@@ -1,0 +1,70 @@
+"""Corpus generator invariants: documents valid by construction, sizes
+track Table 3, determinism."""
+
+import json
+
+import pytest
+
+from repro.core import NaiveValidator, Validator, compile_schema
+from repro.data.corpus import TABLE3, make_corpus, make_dataset
+
+
+@pytest.fixture(scope="module")
+def small_corpus():
+    return make_corpus(scale=0.05)
+
+
+def test_corpus_has_38_datasets(small_corpus):
+    assert len(small_corpus) == 38
+
+
+def test_documents_validate(small_corpus):
+    for ds in small_corpus[:10]:
+        compiled = Validator(compile_schema(ds.schema))
+        naive = NaiveValidator(ds.schema)
+        for doc in ds.documents[:20]:
+            assert compiled.is_valid(doc), (ds.name, doc)
+            assert naive.is_valid(doc), (ds.name, doc)
+
+
+def test_schema_sizes_track_table3(small_corpus):
+    for ds, (name, _, kb, _) in zip(small_corpus, TABLE3):
+        assert ds.name == name
+        # grown past the target, within a generous factor
+        assert ds.schema_bytes >= kb * 1024 * 0.9, (name, ds.schema_bytes, kb)
+        assert ds.schema_bytes <= kb * 1024 * 3 + 4096, (name, ds.schema_bytes, kb)
+
+
+def test_deterministic(small_corpus):
+    ds1 = make_dataset("babelrc", 50, 6.5, 140, seed=42, scale=0.2)
+    ds2 = make_dataset("babelrc", 50, 6.5, 140, seed=42, scale=0.2)
+    assert json.dumps(ds1.schema, sort_keys=True) == json.dumps(ds2.schema, sort_keys=True)
+    assert ds1.documents == ds2.documents
+
+
+def test_dialects(small_corpus):
+    by_name = {ds.name: ds for ds in small_corpus}
+    assert "2020-12" in by_name["cql2"].dialect
+    assert "2020-12" in by_name["openapi"].dialect
+    assert "draft-07" in by_name["babelrc"].dialect
+
+
+def test_invalid_mutations_rejected(small_corpus):
+    """Mutate valid docs; the validator must catch type violations."""
+    ds = small_corpus[0]
+    v = Validator(compile_schema(ds.schema))
+    n = NaiveValidator(ds.schema)
+    caught = 0
+    for doc in ds.documents[:30]:
+        mutated = dict(doc)
+        for key, value in list(mutated.items()):
+            if isinstance(value, str):
+                mutated[key] = [1, 2, 3]
+                break
+            if isinstance(value, (int, float)) and not isinstance(value, bool):
+                mutated[key] = "not-a-number"
+                break
+        got_c, got_n = v.is_valid(mutated), n.is_valid(mutated)
+        assert got_c == got_n, (ds.name, mutated)
+        caught += not got_c
+    assert caught > 0

@@ -1,0 +1,202 @@
+"""Property-based differential testing: the compiled executor and the naive
+interpreter are two independent implementations of the same spec -- on any
+(schema, document) pair they must agree (Blaze §3.5 correctness argument).
+"""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CompilerOptions, NaiveValidator, Validator, compile_schema
+
+# ---------------------------------------------------------------------------
+# Random JSON documents
+# ---------------------------------------------------------------------------
+
+json_scalars = st.one_of(
+    st.none(),
+    st.booleans(),
+    st.integers(min_value=-(2**31), max_value=2**31),
+    st.floats(allow_nan=False, allow_infinity=False, width=32),
+    st.text(max_size=12),
+    st.text(alphabet="abxy-_ .$/~", max_size=40),
+)
+
+json_docs = st.recursive(
+    json_scalars,
+    lambda children: st.one_of(
+        st.lists(children, max_size=5),
+        st.dictionaries(st.text(max_size=8), children, max_size=5),
+        st.dictionaries(
+            st.sampled_from(["a", "b", "kind", "name", "value", "x-e", "S_1", "tags"]),
+            children,
+            max_size=6,
+        ),
+    ),
+    max_leaves=20,
+)
+
+# ---------------------------------------------------------------------------
+# Random JSON Schemas (bounded depth, drawn from realistic keyword templates)
+# ---------------------------------------------------------------------------
+
+_key_names = st.sampled_from(["a", "b", "kind", "name", "value", "x-e", "S_1", "tags"])
+_types = st.sampled_from(
+    ["string", "integer", "number", "boolean", "null", "array", "object"]
+)
+_patterns = st.sampled_from(
+    [".*", ".+", "^x-", "^.{2,4}$", "a", "^S_", "b.b", "^foo$", "-x$", "[0-9]+"]
+)
+
+
+def _schemas(depth: int):
+    leaf = st.one_of(
+        st.builds(lambda t: {"type": t}, _types),
+        st.builds(lambda t, u: {"type": [t, u]}, _types, _types),
+        st.builds(lambda n: {"minimum": n}, st.integers(-5, 5)),
+        st.builds(lambda n: {"maximum": n}, st.integers(-5, 5)),
+        st.builds(lambda n: {"exclusiveMinimum": n}, st.integers(-5, 5)),
+        st.builds(lambda n: {"multipleOf": n}, st.sampled_from([1, 2, 0.5, 3])),
+        st.builds(lambda n: {"minLength": n}, st.integers(0, 5)),
+        st.builds(lambda n: {"maxLength": n}, st.integers(0, 8)),
+        st.builds(lambda p: {"pattern": p}, _patterns),
+        st.builds(lambda v: {"const": v}, json_scalars),
+        st.builds(lambda v: {"enum": v}, st.lists(json_scalars, min_size=1, max_size=4)),
+        st.builds(lambda n: {"minItems": n}, st.integers(0, 3)),
+        st.builds(lambda n: {"maxItems": n}, st.integers(0, 4)),
+        st.just({"uniqueItems": True}),
+        st.builds(lambda ks: {"required": ks}, st.lists(_key_names, max_size=3, unique=True)),
+        st.builds(lambda n: {"minProperties": n}, st.integers(0, 3)),
+        st.builds(lambda n: {"maxProperties": n}, st.integers(0, 4)),
+        st.builds(lambda p: {"propertyNames": {"pattern": p}}, _patterns),
+        st.just(True),
+        st.just(False),
+    )
+    if depth <= 0:
+        return leaf
+    sub = _schemas(depth - 1)
+    composite = st.one_of(
+        leaf,
+        st.builds(
+            lambda props: {"properties": props},
+            st.dictionaries(_key_names, sub, min_size=1, max_size=4),
+        ),
+        st.builds(
+            lambda props, closed: {"properties": props, "additionalProperties": closed},
+            st.dictionaries(_key_names, sub, min_size=1, max_size=3),
+            st.one_of(st.booleans(), sub),
+        ),
+        st.builds(lambda p, s: {"patternProperties": {p: s}}, _patterns, sub),
+        st.builds(lambda s: {"items": s}, sub),
+        st.builds(
+            lambda pre, tail: {"prefixItems": pre, "items": tail},
+            st.lists(sub, min_size=1, max_size=3),
+            st.one_of(st.booleans(), sub),
+        ),
+        st.builds(lambda s: {"contains": s}, sub),
+        st.builds(
+            lambda s, lo, hi: {"contains": s, "minContains": lo, "maxContains": hi},
+            sub,
+            st.integers(0, 2),
+            st.integers(2, 4),
+        ),
+        st.builds(lambda xs: {"allOf": xs}, st.lists(sub, min_size=1, max_size=3)),
+        st.builds(lambda xs: {"anyOf": xs}, st.lists(sub, min_size=1, max_size=3)),
+        st.builds(lambda xs: {"oneOf": xs}, st.lists(sub, min_size=1, max_size=3)),
+        st.builds(lambda s: {"not": s}, sub),
+        st.builds(
+            lambda i, t, e: {"if": i, "then": t, "else": e}, sub, sub, sub
+        ),
+        st.builds(
+            lambda k, s: {"dependentSchemas": {k: s}}, _key_names, sub
+        ),
+        st.builds(
+            lambda k, ks: {"dependentRequired": {k: ks}},
+            _key_names,
+            st.lists(_key_names, max_size=2),
+        ),
+        st.builds(
+            lambda props, s: {"properties": props, "unevaluatedProperties": s},
+            st.dictionaries(_key_names, sub, max_size=3),
+            st.one_of(st.booleans(), sub),
+        ),
+        st.builds(
+            lambda branches, s: {"anyOf": branches, "unevaluatedProperties": s},
+            st.lists(
+                st.builds(
+                    lambda props, req: {"properties": props, "required": req},
+                    st.dictionaries(_key_names, sub, min_size=1, max_size=2),
+                    st.lists(_key_names, max_size=1),
+                ),
+                min_size=1,
+                max_size=2,
+            ),
+            st.one_of(st.booleans(), sub),
+        ),
+        st.builds(
+            lambda pre, s: {"prefixItems": pre, "unevaluatedItems": s},
+            st.lists(sub, min_size=1, max_size=2),
+            st.one_of(st.booleans(), sub),
+        ),
+    )
+    return composite
+
+
+def _maybe_wrap_in_ref(s):
+    """Hoist some schemas behind a root-level $defs reference (valid refs
+    are root-relative, so this wrapper only appears at the top level)."""
+    if not isinstance(s, dict):
+        return s
+    return {
+        "$defs": {"node": s},
+        "allOf": [{"$ref": "#/$defs/node"}],
+    }
+
+
+schemas = st.one_of(
+    _schemas(2),
+    _schemas(2).map(_maybe_wrap_in_ref),
+).map(
+    lambda s: {"$schema": "https://json-schema.org/draft/2020-12/schema", **s}
+    if isinstance(s, dict)
+    else s
+)
+
+
+@settings(max_examples=400, deadline=None)
+@given(schema=schemas, doc=json_docs)
+def test_compiled_matches_interpreter(schema, doc):
+    compiled = Validator(compile_schema(schema))
+    naive = NaiveValidator(schema)
+    assert compiled.is_valid(doc) is naive.is_valid(doc), (schema, doc)
+
+
+@settings(max_examples=150, deadline=None)
+@given(schema=schemas, doc=json_docs)
+def test_optimizations_preserve_semantics(schema, doc):
+    """Fully-optimized vs fully-unoptimized compilation must agree."""
+    fast = Validator(compile_schema(schema))
+    slow = Validator(
+        compile_schema(
+            schema,
+            options=CompilerOptions(
+                unroll=False, regex_specialize=False, reorder=False, cisc=False, elide=False
+            ),
+        ),
+        use_hashing=False,
+    )
+    assert fast.is_valid(doc) is slow.is_valid(doc), (schema, doc)
+
+
+@settings(max_examples=150, deadline=None)
+@given(doc=json_docs)
+def test_empty_schema_accepts_everything(doc):
+    assert Validator(compile_schema(True)).is_valid(doc)
+    assert Validator(compile_schema({})).is_valid(doc)
+
+
+@settings(max_examples=50, deadline=None)
+@given(doc=json_docs)
+def test_false_schema_rejects_everything(doc):
+    assert not Validator(compile_schema(False)).is_valid(doc)

@@ -1,0 +1,58 @@
+"""Failure-trace diagnostics (paper §8's error-message option)."""
+
+from repro.core import Validator, compile_schema
+
+SCHEMA = {
+    "$schema": "https://json-schema.org/draft/2020-12/schema",
+    "type": "object",
+    "required": ["name"],
+    "additionalProperties": False,
+    "properties": {
+        "name": {"type": "string", "minLength": 2},
+        "age": {"type": "integer", "minimum": 0},
+        "tags": {"type": "array", "items": {"type": "string"}},
+    },
+}
+
+
+def _validator():
+    return Validator(compile_schema(SCHEMA))
+
+
+class TestExplain:
+    def test_valid_document_empty_trace(self):
+        ok, trace = _validator().explain({"name": "bob", "age": 3})
+        assert ok and trace == []
+
+    def test_missing_required_points_at_required(self):
+        ok, trace = _validator().explain({"age": 3})
+        assert not ok
+        assert any("required" in path for path, _ in trace), trace
+
+    def test_minimum_failure_points_at_keyword(self):
+        ok, trace = _validator().explain({"name": "bob", "age": -1})
+        assert not ok
+        paths = [p for p, _ in trace]
+        assert any("age" in p for p in paths), trace
+
+    def test_nested_item_failure(self):
+        ok, trace = _validator().explain({"name": "bob", "tags": ["a", 1]})
+        assert not ok
+        assert any("items" in p or "tags" in p for p, _ in trace), trace
+
+    def test_trace_does_not_leak_into_hot_path(self):
+        v = _validator()
+        v.explain({"age": 3})
+        assert v.ctx.trace is None
+        assert v.is_valid({"name": "ok"}) is True
+
+    def test_explain_agrees_with_is_valid(self):
+        v = _validator()
+        docs = [
+            {"name": "bob"}, {"age": 1}, {"name": "x"}, 5, [],
+            {"name": "bob", "zzz": 1}, {"name": "bob", "tags": []},
+        ]
+        for d in docs:
+            ok, trace = v.explain(d)
+            assert ok == v.is_valid(d), d
+            assert ok == (trace == []) or not ok, d

@@ -1,0 +1,131 @@
+"""Data pipeline (admission, sharding, packing) and serving engine tests."""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import AdmissionController, ShardedPipeline
+from repro.models import Model
+from repro.serve.engine import REQUEST_SCHEMA, ServeConfig, ServeEngine
+
+RECORD_SCHEMA = {
+    "type": "object",
+    "required": ["text"],
+    "additionalProperties": False,
+    "properties": {
+        "text": {"type": "string", "minLength": 1},
+        "quality": {"type": "number", "minimum": 0, "maximum": 1},
+        "lang": {"enum": ["en", "fr", "de"]},
+    },
+}
+
+
+def _records(n):
+    recs = []
+    for i in range(n):
+        if i % 5 == 4:
+            recs.append({"text": "", "quality": 0.5})  # invalid: minLength
+        elif i % 7 == 6:
+            recs.append({"text": "ok", "lang": "xx"})  # invalid: enum
+        else:
+            recs.append({"text": f"document number {i} " * 3, "quality": 0.9, "lang": "en"})
+    return recs
+
+
+class TestAdmission:
+    def test_admission_counts(self):
+        ctrl = AdmissionController(RECORD_SCHEMA)
+        recs = _records(35)
+        oks = ctrl.admit(recs)
+        n_bad = sum(1 for i in range(35) if i % 5 == 4 or i % 7 == 6)
+        assert sum(oks) == 35 - n_bad
+        assert ctrl.stats.rejected == n_bad
+        assert ctrl.stats.batch_validated + ctrl.stats.fallback_validated == 35
+
+    def test_batch_fast_path_used(self):
+        ctrl = AdmissionController(RECORD_SCHEMA)
+        assert ctrl.batch_validator is not None  # structural subset
+        ctrl.admit(_records(16))
+        assert ctrl.stats.batch_validated > 0
+
+    def test_fallback_on_unsupported_schema(self):
+        schema = {"not": {"type": "string"}}  # outside the tensor subset
+        ctrl = AdmissionController(schema)
+        assert ctrl.batch_validator is None
+        oks = ctrl.admit([1, "s"])
+        assert oks == [True, False]
+        assert ctrl.stats.fallback_validated == 2
+
+
+class TestShardedPipeline:
+    def test_hosts_partition_records(self):
+        recs = _records(64)
+        seen = [set(), set()]
+        for host in (0, 1):
+            pipe = ShardedPipeline(
+                RECORD_SCHEMA, recs, host_id=host, num_hosts=2,
+                seq_len=32, batch_size=2,
+            )
+            for i, rec in pipe._shard_records():
+                seen[host].add(i)
+        assert seen[0].isdisjoint(seen[1])
+        assert seen[0] | seen[1] == set(range(64))
+
+    def test_batches_shape_and_masking(self):
+        pipe = ShardedPipeline(
+            RECORD_SCHEMA, _records(60), seq_len=32, batch_size=2
+        )
+        batches = list(pipe.batches())
+        assert batches, "pipeline must yield at least one batch"
+        for b in batches:
+            assert b["tokens"].shape == (2, 32)
+            assert b["labels"].shape == (2, 32)
+            assert (b["labels"][:, -1] == -1).all()
+        assert pipe.admission.stats.rejected > 0
+
+    def test_deterministic_replay(self):
+        recs = _records(60)
+        a = [b["tokens"] for b in ShardedPipeline(
+            RECORD_SCHEMA, recs, seq_len=32, batch_size=2).batches()]
+        b = [b["tokens"] for b in ShardedPipeline(
+            RECORD_SCHEMA, recs, seq_len=32, batch_size=2).batches()]
+        assert len(a) == len(b)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+
+class TestServeEngine:
+    @pytest.fixture(scope="class")
+    def engine(self):
+        cfg = get_config("granite-3-8b").reduced()
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        return ServeEngine(cfg, params, ServeConfig(batch_slots=2, max_len=64,
+                                                    default_max_tokens=4))
+
+    def test_rejects_invalid_requests(self, engine):
+        rid, err = engine.submit(json.dumps({"prompt": ""}))  # minLength
+        assert rid is None and "validation" in err
+        rid, err = engine.submit(json.dumps({"max_tokens": 4}))  # missing prompt
+        assert rid is None
+        rid, err = engine.submit("{not json")
+        assert rid is None and "malformed" in err
+        rid, err = engine.submit(json.dumps({"prompt": "hi", "extra": 1}))
+        assert rid is None  # closed object
+
+    def test_serves_valid_requests(self, engine):
+        ids = []
+        for i in range(3):
+            rid, err = engine.submit(
+                json.dumps({"prompt": f"request {i}", "max_tokens": 3})
+            )
+            assert rid is not None, err
+            ids.append(rid)
+        results = engine.run_until_drained(max_steps=64)
+        for rid in ids:
+            assert rid in results
+        assert engine.stats.completed >= 3
+        assert engine.stats.validation_seconds < 1.0  # admission is cheap
