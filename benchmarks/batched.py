@@ -2,15 +2,24 @@
 
 Measures (a) what fraction of the benchmark corpus compiles to the
 structural-subset tensor tape (the batch fast path), and (b) throughput of
-the batched executor vs the sequential engine on an API-gateway-style
-request schema, at increasing batch sizes (jnp path on CPU; the Pallas
-path is validated separately in tests with interpret=True).
+the batched executor on an API-gateway-style request schema at increasing
+batch sizes, comparing the historical **dense** layout (hash_match per
+depth iteration + full (B*N x A) assertion matrix) against the
+**owner-sorted CSR** layout (one hoisted hash pass + (B*N x A-hat)
+windows).  jnp path on CPU; the Pallas path is validated separately in
+tests with interpret=True.
+
+Emits ``results/BENCH_batched.json`` -- docs/s per batch size for both
+layouts, the tape-coverage fraction, and the per-tape A-hat/K constants --
+so the perf trajectory stays machine-readable across PRs.
 """
 
 from __future__ import annotations
 
+import json
 import os
 import time
+from pathlib import Path
 from typing import Dict, List
 
 from repro.core import Validator, compile_schema
@@ -22,6 +31,8 @@ from repro.data.doc_table import encode_batch
 from repro.serve.engine import REQUEST_SCHEMA
 
 SCALE = float(os.environ.get("BENCH_CORPUS_SCALE", "0.1"))
+BATCH_SIZES = (64, 512, 4096)
+RESULTS = Path(__file__).resolve().parents[1] / "results"
 
 
 def run(report: Dict[str, object]) -> List[str]:
@@ -30,10 +41,20 @@ def run(report: Dict[str, object]) -> List[str]:
     # -- (a) corpus coverage of the tensor tape ------------------------------
     corpus = make_corpus(scale=SCALE)
     batchable, reasons = 0, {}
+    tape_stats = []
     for ds in corpus:
         tape, reason = try_build_tape(compile_schema(ds.schema))
         if tape is not None:
             batchable += 1
+            tape_stats.append(
+                {
+                    "dataset": ds.name,
+                    "a_hat": tape.max_rows_per_loc,
+                    "k": tape.max_hash_run,
+                    "assertions": tape.n_assertions,
+                    "locations": tape.n_locations,
+                }
+            )
         else:
             reasons[ds.name] = reason
     coverage = batchable / len(corpus)
@@ -51,7 +72,10 @@ def run(report: Dict[str, object]) -> List[str]:
     tape, reason = try_build_tape(compiled)
     assert tape is not None, f"request schema must be batchable: {reason}"
     seq = Validator(compiled)
-    bv = BatchValidator(tape, use_pallas=False)
+    executors = {
+        "dense": BatchValidator(tape, use_pallas=False, layout="dense"),
+        "csr": BatchValidator(tape, use_pallas=False, layout="csr"),
+    }
 
     import random
 
@@ -69,7 +93,7 @@ def run(report: Dict[str, object]) -> List[str]:
         return req
 
     rows = []
-    for batch in (64, 512, 4096):
+    for batch in BATCH_SIZES:
         docs = [mk_request(i) for i in range(batch)]
         parsed = [parse_document(d) for d in docs]
         t0 = time.perf_counter()
@@ -77,25 +101,51 @@ def run(report: Dict[str, object]) -> List[str]:
         t_seq = time.perf_counter() - t0
 
         table = encode_batch(docs, max_nodes=64)
-        bv.validate(table)  # warm the jit
         t0 = time.perf_counter()
-        valid, decided = bv.validate(table)
-        t_batch = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        table2 = encode_batch(docs, max_nodes=64)
+        encode_batch(docs, max_nodes=64)
         t_encode = time.perf_counter() - t0
-        assert all(bool(v) == r for v, r, d in zip(valid, seq_results, decided) if d)
-        rows.append(
-            {
-                "batch": batch,
-                "sequential_us_per_doc": t_seq / batch * 1e6,
-                "batched_us_per_doc": t_batch / batch * 1e6,
-                "encode_us_per_doc": t_encode / batch * 1e6,
-            }
-        )
+
+        row = {
+            "batch": batch,
+            "sequential_docs_per_s": batch / t_seq,
+            "sequential_us_per_doc": t_seq / batch * 1e6,
+            "encode_us_per_doc": t_encode / batch * 1e6,
+        }
+        for name, bv in executors.items():
+            bv.validate(table)  # warm the jit
+            t0 = time.perf_counter()
+            valid, decided = bv.validate(table)
+            t_batch = time.perf_counter() - t0
+            assert all(
+                bool(v) == r for v, r, d in zip(valid, seq_results, decided) if d
+            )
+            row[f"{name}_docs_per_s"] = batch / t_batch
+            row[f"{name}_us_per_doc"] = t_batch / batch * 1e6
+        row["csr_speedup_vs_dense"] = row["csr_docs_per_s"] / row["dense_docs_per_s"]
+        rows.append(row)
         lines.append(
-            f"batched/request_validation_b{batch},{t_batch/batch*1e6:.2f},"
-            f"seq_us={t_seq/batch*1e6:.2f};encode_us={t_encode/batch*1e6:.2f}"
+            f"batched/request_validation_b{batch},{row['csr_us_per_doc']:.2f},"
+            f"dense_us={row['dense_us_per_doc']:.2f};"
+            f"seq_us={row['sequential_us_per_doc']:.2f};"
+            f"csr_x_dense={row['csr_speedup_vs_dense']:.2f}"
         )
-    report["batched"] = {"coverage": coverage, "unbatchable": reasons, "throughput": rows}
+
+    payload = {
+        "schema": "api_gateway_request",
+        "tape": {
+            "a_hat": tape.max_rows_per_loc,
+            "k": tape.max_hash_run,
+            "assertions": tape.n_assertions,
+            "prop_rows": tape.n_props,
+            "locations": tape.n_locations,
+        },
+        "coverage": coverage,
+        "corpus_tapes": tape_stats,
+        "unbatchable": reasons,
+        "throughput": rows,
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "BENCH_batched.json").write_text(json.dumps(payload, indent=2))
+    lines.append(f"batched/bench_json,0,results/BENCH_batched.json")
+    report["batched"] = payload
     return lines

@@ -8,7 +8,9 @@ One module per paper table/figure:
   roofline     -- §Roofline terms from the dry-run artifacts
 
 Prints ``name,us_per_call,derived`` CSV lines and writes the full report
-to results/bench_report.json.
+to results/bench_report.json.  The batched module additionally emits
+results/BENCH_batched.json (dense vs owner-sorted-CSR docs/s per batch
+size + tape coverage) for machine-readable perf tracking across PRs.
 """
 
 from __future__ import annotations

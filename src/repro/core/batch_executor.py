@@ -3,19 +3,36 @@
 Validates B documents against one compiled location tape in a handful of
 large tensor ops:
 
-1. **Location propagation** -- BFS-level loop (static, ``max_depth``
-   iterations): every node's schema location derives from its parent's via
-   the property-transition table (``hash_match`` kernel) or the
-   item/prefix rules.  Unmatched properties map to the location's
-   additionalProperties location, ``UNTRACKED`` (no constraints below) or
-   ``INVALID`` (closed object).
+1. **Location propagation** -- one owner-blind ``hash_match`` pass over
+   all B*N nodes finds each node's *candidate set*: the contiguous run of
+   hash-sorted property rows sharing the node's key hash (<= K rows,
+   K = ``tape.max_hash_run``).  The BFS-level loop (static, ``max_depth``
+   iterations) then resolves each node's schema location from its
+   parent's with a cheap owner-equality check over the K candidates --
+   O(N*M + depth*N*K) instead of the historical O(depth*N*M) of running
+   the full kernel every iteration.  Unmatched properties map to the
+   location's additionalProperties location, ``UNTRACKED`` (no
+   constraints below) or ``INVALID`` (closed object); array items follow
+   the item/prefix rules.
 2. **Required tracking** -- matched children scatter their required-slot
    bit into the parent's acquired mask; objects then check
    ``acquired & required == required``.
-3. **Assertion evaluation** -- the ``assertion_eval`` kernel computes the
-   (nodes x rows) pass matrix; ownership masking and enum OR-group
-   reduction are fused selects around it.
-4. **Reduce** -- AND over nodes per document.
+3. **Assertion evaluation** -- each node gathers only its own location's
+   owner-sorted CSR window (<= A-hat rows, ``tape.max_rows_per_loc``) and
+   the windowed ``assertion_eval`` kernel computes the (nodes x A-hat)
+   pass matrix; enum OR-groups reduce with a segmented scan over the
+   window (groups are contiguous by construction).  O(N*A-hat) memory and
+   compute instead of the dense O(N*A) matrix plus a rank-3 (N, A, G)
+   one-hot reduction.
+4. **Reduce** -- AND over nodes per document, plus a per-document
+   ``decided`` flag: nodes deeper than the ``max_depth`` budget never
+   receive a location, so their documents are flagged undecided and must
+   be routed to the sequential executor (mirroring the encoder budget in
+   ``TokenTable.ok``) instead of vacuously passing.
+
+``layout="dense"`` keeps the historical full-matrix path (hash_match per
+depth iteration + dense assertion matrix) for apples-to-apples
+benchmarking; both layouts produce bit-identical (valid, decided).
 
 The per-document fail-fast of the sequential engine becomes batch-level
 work (§2.3 short-circuiting has no analogue across a converged batch); the
@@ -32,13 +49,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.tape import LOC_INVALID, LOC_UNTRACKED, LocationTape
 from ..kernels import ops as kops
+from .nodetypes import T_ARR as _T_ARR, T_OBJ as _T_OBJ
+from .tape import LOC_INVALID, LOC_UNTRACKED, LocationTape
 
 __all__ = ["BatchValidator"]
 
-_T_OBJ = 6
-_T_ARR = 5
+_BIG = jnp.int32(2**30)
 
 
 def _tape_consts(tape: LocationTape) -> Dict[str, jnp.ndarray]:
@@ -47,6 +64,12 @@ def _tape_consts(tape: LocationTape) -> Dict[str, jnp.ndarray]:
         "prop_hash": jnp.asarray(tape.prop_hash),
         "prop_child_loc": jnp.asarray(tape.prop_child_loc),
         "prop_required_slot": jnp.asarray(tape.prop_required_slot),
+        "psort_hash": jnp.asarray(tape.psort_hash),
+        "psort_owner": jnp.asarray(tape.psort_owner),
+        "psort_child_loc": jnp.asarray(tape.psort_child_loc),
+        "psort_required_slot": jnp.asarray(tape.psort_required_slot),
+        "psort_orig_row": jnp.asarray(tape.psort_orig_row),
+        "psort_run_len": jnp.asarray(tape.psort_run_len),
         "loc_closed": jnp.asarray(tape.loc_closed),
         "loc_addl": jnp.asarray(tape.loc_addl),
         "loc_item": jnp.asarray(tape.loc_item),
@@ -55,6 +78,8 @@ def _tape_consts(tape: LocationTape) -> Dict[str, jnp.ndarray]:
         "loc_prefix_len": jnp.asarray(tape.loc_prefix_len),
         "prefix_loc": jnp.asarray(tape.prefix_loc),
         "loc_required_mask": jnp.asarray(tape.loc_required_mask.astype(np.int32)),
+        "loc_asrt_start": jnp.asarray(tape.loc_asrt_start),
+        "loc_asrt_len": jnp.asarray(tape.loc_asrt_len),
         "asrt_owner": jnp.asarray(tape.asrt_owner),
         "asrt_op": jnp.asarray(tape.asrt_op),
         "asrt_group": jnp.asarray(tape.asrt_group),
@@ -76,32 +101,51 @@ class BatchValidator:
         *,
         max_depth: int = 16,
         use_pallas: bool = True,
+        layout: str = "csr",
     ):
+        if layout not in ("csr", "dense"):
+            raise ValueError(f"unknown layout {layout!r}")
         self.tape = tape
         self.max_depth = max_depth
         self.use_pallas = use_pallas
+        self.layout = layout
+        # compile-time window bounds (clamped: the kernels need >= 1 slot)
+        self.n_window = max(1, tape.max_rows_per_loc)
+        self.k_cand = max(1, tape.max_hash_run)
         self._consts = _tape_consts(tape)
         self._fn = jax.jit(
             functools.partial(
                 _validate_batch,
                 consts=self._consts,
                 max_depth=max_depth,
+                max_loc_depth=tape.max_loc_depth,
                 use_pallas=use_pallas,
+                layout=layout,
+                n_window=self.n_window,
+                k_cand=self.k_cand,
             )
         )
 
     def validate(self, table) -> Tuple[np.ndarray, np.ndarray]:
         """Returns (valid, decided) boolean arrays of shape (B,).
 
-        ``decided=False`` rows exceeded the encoder budget and must be
-        routed to the sequential executor.
+        ``decided=False`` rows exceeded the encoder budget *or* contain
+        nodes deeper than this validator's ``max_depth`` (which the
+        location loop never reaches); both must be routed to the
+        sequential executor -- their ``valid`` entry is meaningless.
         """
         cols = {k: jnp.asarray(v) for k, v in table.columns().items()}
-        valid = self._fn(cols)
-        return np.asarray(valid), np.asarray(table.ok)
+        valid, in_depth = self._fn(cols)
+        return np.asarray(valid), np.asarray(in_depth) & np.asarray(table.ok)
 
 
-def _validate_batch(cols, *, consts, max_depth: int, use_pallas: bool):
+def _propagate_locations(
+    cols, consts, *, loop_depth: int, use_pallas: bool, layout: str, k_cand: int
+):
+    """Assign every node a schema location; returns (loc, acquired, aux).
+
+    ``aux`` carries the flat per-node columns reused by the caller.
+    """
     B, N = cols["node_type"].shape
     flat = lambda x: x.reshape((B * N,) + x.shape[2:])
 
@@ -110,14 +154,12 @@ def _validate_batch(cols, *, consts, max_depth: int, use_pallas: bool):
     depth = flat(cols["depth"])
     idx_in_parent = flat(cols["idx_in_parent"])
     key_hash = flat(cols["key_hash"])
-    size = flat(cols["size"])
 
     doc_base = jnp.repeat(jnp.arange(B, dtype=jnp.int32) * N, N)
     parent_flat = jnp.where(parent >= 0, doc_base + parent, 0)
 
     is_pad = node_type == 0
 
-    # ---- 1. location propagation -------------------------------------------
     loc = jnp.where(
         jnp.arange(B * N, dtype=jnp.int32) % N == 0,
         jnp.int32(0),
@@ -125,26 +167,59 @@ def _validate_batch(cols, *, consts, max_depth: int, use_pallas: bool):
     )
     acquired = jnp.zeros(B * N, jnp.int32)  # required-slot bits per object
 
-    for d in range(1, max_depth + 1):
+    if layout == "csr":
+        # -- hoisted single hash pass: owner-blind match over the
+        # hash-sorted table finds each member node's candidate-run start
+        is_member_all = ~is_pad & (parent >= 0) & (node_type[parent_flat] == _T_OBJ)
+        # real rows match on owner 0; the empty-table placeholder (owner
+        # -1) keeps a sentinel so all-zero key lanes cannot hit it
+        t_owner0 = jnp.where(consts["psort_owner"] >= 0, jnp.int32(0), jnp.int32(-9))
+        q_owner0 = jnp.where(is_member_all, jnp.int32(0), jnp.int32(-1))
+        first = kops.hash_match(
+            key_hash, q_owner0, consts["psort_hash"], t_owner0, use_pallas=use_pallas
+        )
+        has_cand = first >= 0
+        safe_first = jnp.where(has_cand, first, 0)
+        run_len = jnp.where(has_cand, consts["psort_run_len"][safe_first], 0)
+        M = consts["psort_owner"].shape[0]
+        k_arange = jnp.arange(k_cand, dtype=jnp.int32)[None, :]  # (1, K)
+        cand_rows = jnp.clip(safe_first[:, None] + k_arange, 0, M - 1)  # (BN, K)
+        cand_valid = k_arange < run_len[:, None]
+        cand_owner = jnp.where(cand_valid, consts["psort_owner"][cand_rows], -1)
+        cand_child = consts["psort_child_loc"][cand_rows]
+        cand_slot = consts["psort_required_slot"][cand_rows]
+        cand_orig = consts["psort_orig_row"][cand_rows]
+
+    for d in range(1, loop_depth + 1):
         at_depth = (depth == d) & ~is_pad & (parent >= 0)
         parent_loc = loc[parent_flat]
         parent_type = node_type[parent_flat]
 
-        # -- object members: property-table match (hash_match kernel)
+        # -- object members: property-table match
         is_member = at_depth & (parent_type == _T_OBJ)
-        q_owner = jnp.where(is_member & (parent_loc >= 0), parent_loc, jnp.int32(-1))
-        row = kops.hash_match(
-            key_hash,
-            q_owner,
-            consts["prop_hash"],
-            consts["prop_owner"],
-            use_pallas=use_pallas,
-        )
-        matched = row >= 0
-        safe_row = jnp.where(matched, row, 0)
-        child_loc = jnp.where(
-            matched, consts["prop_child_loc"][safe_row], jnp.int32(LOC_UNTRACKED)
-        )
+        if layout == "csr":
+            # owner-equality over the K pre-gathered candidates; ties
+            # break to the minimal original row (dense-path semantics)
+            m = cand_valid & (cand_owner == parent_loc[:, None])
+            orig_masked = jnp.where(m, cand_orig, _BIG)
+            best_k = jnp.argmin(orig_masked, axis=1)
+            matched = jnp.min(orig_masked, axis=1) < _BIG
+            child_loc_m = jnp.take_along_axis(cand_child, best_k[:, None], axis=1)[:, 0]
+            slot_m = jnp.take_along_axis(cand_slot, best_k[:, None], axis=1)[:, 0]
+        else:
+            q_owner = jnp.where(is_member & (parent_loc >= 0), parent_loc, jnp.int32(-1))
+            row = kops.hash_match(
+                key_hash,
+                q_owner,
+                consts["prop_hash"],
+                consts["prop_owner"],
+                use_pallas=use_pallas,
+            )
+            matched = row >= 0
+            safe_row = jnp.where(matched, row, 0)
+            child_loc_m = consts["prop_child_loc"][safe_row]
+            slot_m = consts["prop_required_slot"][safe_row]
+        child_loc = jnp.where(matched, child_loc_m, jnp.int32(LOC_UNTRACKED))
         # unmatched at a tracked object location: addl / closed / untracked
         p_loc_safe = jnp.where(parent_loc >= 0, parent_loc, 0)
         addl = consts["loc_addl"][p_loc_safe]
@@ -158,7 +233,7 @@ def _validate_batch(cols, *, consts, max_depth: int, use_pallas: bool):
         member_loc = jnp.where(parent_loc >= 0, member_loc, parent_loc)
 
         # required bit scatter into the parent's acquired mask
-        slot = jnp.where(matched, consts["prop_required_slot"][safe_row], -1)
+        slot = jnp.where(matched, slot_m, -1)
         contrib = jnp.where(
             is_member & (slot >= 0),
             jnp.left_shift(jnp.int32(1), jnp.maximum(slot, 0)),
@@ -188,16 +263,119 @@ def _validate_batch(cols, *, consts, max_depth: int, use_pallas: bool):
         new_loc = jnp.where(is_member, member_loc, jnp.where(is_item, arr_loc, loc))
         loc = jnp.where(at_depth, new_loc, loc)
 
+    aux = {
+        "node_type": node_type,
+        "is_pad": is_pad,
+        "flat": flat,
+        "B": B,
+        "N": N,
+    }
+    return loc, acquired, aux
+
+
+def _segment_or_suffix(vals: jnp.ndarray, grp: jnp.ndarray) -> jnp.ndarray:
+    """Segmented suffix-OR along axis 1.
+
+    ``out[:, j] = OR(vals[:, k] for k >= j while grp stays equal)`` --
+    groups are contiguous within a CSR window, so evaluating at each
+    segment start yields the whole group's OR.  Implemented as an
+    associative segmented scan (O(log W) depth, static shapes).
+    """
+    same_next = jnp.concatenate(
+        [grp[:, :-1] == grp[:, 1:], jnp.zeros_like(grp[:, :1], bool)], axis=1
+    )
+    rv = jnp.flip(vals, axis=1)
+    rc = jnp.flip(same_next, axis=1)
+
+    def combine(a, b):
+        av, ac = a
+        bv, bc = b
+        return (bv | (bc & av), ac & bc)
+
+    out, _ = jax.lax.associative_scan(combine, (rv, rc), axis=1)
+    return jnp.flip(out, axis=1)
+
+
+def _assertions_csr(loc, node_cols, consts, *, use_pallas: bool, n_window: int):
+    """Windowed assertion evaluation + segmented OR-group reduction."""
+    A = consts["asrt_op"].shape[0]
+    tracked = loc >= 0
+    loc_safe = jnp.where(tracked, loc, 0)
+    w_start = consts["loc_asrt_start"][loc_safe]
+    w_len = jnp.where(tracked, consts["loc_asrt_len"][loc_safe], 0)
+    slots = jnp.arange(n_window, dtype=jnp.int32)[None, :]  # (1, W)
+    w_rows = jnp.clip(w_start[:, None] + slots, 0, A - 1)  # (BN, W)
+    w_valid = slots < w_len[:, None]  # (BN, W) == "applies"
+    w_cols = {
+        "op": jnp.where(w_valid, consts["asrt_op"][w_rows], -1),
+        "f0": consts["asrt_f0"][w_rows],
+        "i0": consts["asrt_i0"][w_rows],
+        "i1": consts["asrt_i1"][w_rows],
+        "u0": consts["asrt_u0"][w_rows],
+        "u1": consts["asrt_u1"][w_rows],
+        "hash": consts["asrt_hash"][w_rows],
+    }
+    passes = kops.assertion_eval_window(
+        node_cols, w_cols, use_pallas=use_pallas
+    ).astype(bool)  # (BN, W)
+
+    grp = jnp.where(w_valid, consts["asrt_group"][w_rows], 0)
+    is_and = w_valid & (grp == 0)
+    and_ok = jnp.all(jnp.where(is_and, passes, True), axis=1)
+
+    # enum OR-groups: group passes iff any of its (contiguous) rows passes
+    pass_or = passes & w_valid & (grp > 0)
+    seg_any = _segment_or_suffix(pass_or, grp)
+    first_col = jnp.ones_like(grp[:, :1], bool)
+    is_start = (grp > 0) & jnp.concatenate(
+        [first_col, grp[:, 1:] != grp[:, :-1]], axis=1
+    )
+    or_ok = jnp.all(jnp.where(is_start, seg_any, True), axis=1)
+    return and_ok & or_ok
+
+
+def _validate_batch(
+    cols,
+    *,
+    consts,
+    max_depth: int,
+    max_loc_depth: int,
+    use_pallas: bool,
+    layout: str,
+    n_window: int,
+    k_cand: int,
+):
+    # the tape caps trackable depth at compile time: below
+    # max_loc_depth + 1 every location is untracked or under an invalid
+    # ancestor, so the CSR loop stops there.  The dense layout keeps the
+    # historical full-depth loop as the benchmark baseline (verdicts are
+    # identical either way).
+    tape_horizon = max_loc_depth + 1
+    loop_depth = min(max_depth, tape_horizon) if layout == "csr" else max_depth
+    loc, acquired, aux = _propagate_locations(
+        cols,
+        consts,
+        loop_depth=loop_depth,
+        use_pallas=use_pallas,
+        layout=layout,
+        k_cand=k_cand,
+    )
+    node_type = aux["node_type"]
+    is_pad = aux["is_pad"]
+    flat = aux["flat"]
+    B, N = aux["B"], aux["N"]
+    size = flat(cols["size"])
+
     tracked = loc >= 0
 
-    # ---- 2. required properties ----------------------------------------------
+    # ---- 2. required properties --------------------------------------------
     loc_safe = jnp.where(tracked, loc, 0)
     required_mask = jnp.where(
         tracked & (node_type == _T_OBJ), consts["loc_required_mask"][loc_safe], 0
     )
     required_ok = (acquired & required_mask) == required_mask
 
-    # ---- 3. assertion rows ------------------------------------------------------
+    # ---- 3. assertion rows -------------------------------------------------
     node_cols = {
         "type": node_type,
         "is_int": flat(cols["is_int"]),
@@ -206,43 +384,56 @@ def _validate_batch(cols, *, consts, max_depth: int, use_pallas: bool):
         "str_hash": flat(cols["str_hash"]),
         "str_prefix": flat(cols["str_prefix"]),
     }
-    asrt_cols = {
-        "op": consts["asrt_op"],
-        "f0": consts["asrt_f0"],
-        "i0": consts["asrt_i0"],
-        "i1": consts["asrt_i1"],
-        "u0": consts["asrt_u0"],
-        "u1": consts["asrt_u1"],
-        "hash": consts["asrt_hash"],
-    }
-    passes = kops.assertion_eval(node_cols, asrt_cols, use_pallas=use_pallas).astype(
-        bool
-    )  # (B*N, A)
-    applies = loc[:, None] == consts["asrt_owner"][None, :]  # (B*N, A)
-
-    is_and_row = consts["asrt_group"] == 0
-    and_ok = jnp.all(jnp.where(applies & is_and_row[None, :], passes, True), axis=1)
-
-    # enum OR-groups: group passes iff it does not apply or any row matches
-    groups = consts["asrt_group"]
-    n_groups = int(self_max(groups)) + 1
-    if n_groups > 1:
-        onehot = (
-            groups[None, :, None] == jnp.arange(1, n_groups, dtype=jnp.int32)[None, None, :]
-        )  # (1, A, G-1)
-        gm = jnp.any((applies & passes)[:, :, None] & onehot, axis=1)  # (B*N, G-1)
-        ga = jnp.any(applies[:, :, None] & onehot, axis=1)
-        or_ok = jnp.all(jnp.logical_or(~ga, gm), axis=1)
+    if layout == "csr":
+        asrt_ok = _assertions_csr(
+            loc, node_cols, consts, use_pallas=use_pallas, n_window=n_window
+        )
     else:
-        or_ok = jnp.ones(B * N, bool)
+        asrt_cols = {
+            "op": consts["asrt_op"],
+            "f0": consts["asrt_f0"],
+            "i0": consts["asrt_i0"],
+            "i1": consts["asrt_i1"],
+            "u0": consts["asrt_u0"],
+            "u1": consts["asrt_u1"],
+            "hash": consts["asrt_hash"],
+        }
+        passes = kops.assertion_eval(
+            node_cols, asrt_cols, use_pallas=use_pallas
+        ).astype(bool)  # (B*N, A)
+        applies = loc[:, None] == consts["asrt_owner"][None, :]  # (B*N, A)
 
-    # ---- 4. reduce ---------------------------------------------------------------
-    node_valid = (
-        (loc != LOC_INVALID) & and_ok & or_ok & required_ok
-    ) | is_pad
-    return jnp.all(node_valid.reshape(B, N), axis=1)
+        is_and_row = consts["asrt_group"] == 0
+        and_ok = jnp.all(jnp.where(applies & is_and_row[None, :], passes, True), axis=1)
 
+        # enum OR-groups: group passes iff it does not apply or any row matches
+        groups = consts["asrt_group"]
+        n_groups = int(np.asarray(groups).max()) + 1
+        if n_groups > 1:
+            onehot = (
+                groups[None, :, None]
+                == jnp.arange(1, n_groups, dtype=jnp.int32)[None, None, :]
+            )  # (1, A, G-1)
+            gm = jnp.any((applies & passes)[:, :, None] & onehot, axis=1)  # (B*N, G-1)
+            ga = jnp.any(applies[:, :, None] & onehot, axis=1)
+            or_ok = jnp.all(jnp.logical_or(~ga, gm), axis=1)
+        else:
+            or_ok = jnp.ones(B * N, bool)
+        asrt_ok = and_ok & or_ok
 
-def self_max(x: jnp.ndarray) -> int:
-    """Static max of a tape-constant array (tape is host data)."""
-    return int(np.asarray(x).max())
+    # ---- 4. reduce -----------------------------------------------------------
+    node_valid = ((loc != LOC_INVALID) & asrt_ok & required_ok) | is_pad
+    valid = jnp.all(node_valid.reshape(B, N), axis=1)
+
+    # depth-budget coverage: a non-root, non-pad node that never received a
+    # location sits below the max_depth horizon -- its document's verdict
+    # is vacuous, flag it undecided (the silent-correctness fix).  When the
+    # tape horizon fits inside the budget, deeper nodes are provably
+    # unconstrained and every document is decided (statically).
+    if tape_horizon <= max_depth:
+        in_depth = jnp.ones(B, bool)
+    else:
+        is_root = jnp.arange(B * N, dtype=jnp.int32) % N == 0
+        unreached = ~is_pad & ~is_root & (loc == jnp.int32(-1))
+        in_depth = ~jnp.any(unreached.reshape(B, N), axis=1)
+    return valid, in_depth

@@ -14,33 +14,46 @@ objects/arrays, prefixItems/items.  Instructions outside the subset raise
 executor -- the classic fast-path/slow-path split.  Coverage over the
 benchmark corpus is reported in EXPERIMENTS.md.
 
-Assertion-row mini-ISA (column ``asrt_op``):
+Layout (DESIGN.md §4-§5): assertion rows are stored **owner-sorted** as
+CSR windows (``loc_asrt_start``/``loc_asrt_len``, bounded by the static
+``max_rows_per_loc`` = A-hat) so each node evaluates only its own
+location's rows; the property table additionally carries a
+**hash-sorted** view (``psort_*``, runs bounded by ``max_hash_run`` = K)
+so location propagation needs only one owner-blind hash pass; and
+``max_loc_depth`` records the location DAG's depth so the executor can
+truncate its propagation loop at compile-time-known horizons.
+
+Assertion-row mini-ISA (column ``asrt_op``; operands: f0 float, i0/i1
+int32, u0/u1 uint32, plus 8 uint32 hash lanes per row):
 
 ====  ==============  =======================================================
 code  name            semantics (precondition in parentheses)
 ====  ==============  =======================================================
-0     TYPE_MASK       node type in bitmask i0; i1=1 -> numbers must be ints
+0     TYPE_MASK       node type bit (1 << type code) in mask i0;
+                      i1=1 -> numbers must be integers
 1     NUM_GE          (number)  num >= f0
 2     NUM_GT          (number)  num >  f0
 3     NUM_LE          (number)  num <= f0
 4     NUM_LT          (number)  num <  f0
-5     NUM_MULTIPLE    (number)  num divisible by f0
+5     NUM_MULTIPLE    (number)  num divisible by f0 (f0 != 0)
 6     STR_MINLEN      (string)  size >= i0
 7     STR_MAXLEN      (string)  size <= i0
 8     ARR_MINLEN      (array)   size >= i0
 9     ARR_MAXLEN      (array)   size <= i0
 10    OBJ_MINPROPS    (object)  size >= i0
 11    OBJ_MAXPROPS    (object)  size <= i0
-12    STR_PREFIX      (string)  first i0 (<=8) bytes equal u0,u1
-13    STR_EQ          exact string equality via hash lanes
+12    STR_PREFIX      (string)  first i0 (<=8) bytes equal u0,u1 (big-endian)
+13    STR_EQ          exact string equality via hash lanes (non-strings fail)
 14    CONST_NULL      value is null
 15    CONST_BOOL      value is boolean f0
 16    CONST_NUM       value is number f0
-17    STR_EQ_PRE      (string)  equality via hash lanes (skip non-strings)
+17    STR_EQ_PRE      (string)  equality via hash lanes (non-strings pass)
 ====  ==============  =======================================================
 
 Rows sharing a nonzero ``asrt_group`` form an OR-group (``enum``); rows with
-group 0 are ANDed individually with precondition semantics.
+group 0 are ANDed individually with precondition semantics.  Within a CSR
+window the AND rows come first and each OR-group is contiguous (the
+executor's segmented-scan reduction relies on this).
 """
 
 from __future__ import annotations
@@ -52,6 +65,7 @@ import numpy as np
 
 from .compiler import CompiledSchema
 from .instructions import Instruction, Instructions, OpCode
+from .nodetypes import TYPE_BIT
 from .regex_opt import RegexKind
 
 __all__ = ["LocationTape", "UnsupportedForBatch", "build_tape", "try_build_tape", "AOP"]
@@ -87,15 +101,8 @@ class AOP:
 LOC_UNTRACKED = -2  # no constraints below this point
 LOC_INVALID = -3  # reaching this location fails the document
 
-# type code bits (mirrors data.doc_table.TYPE_CODES)
-_TYPE_BIT = {
-    "null": 1 << 1,
-    "boolean": 1 << 2,
-    "number": 1 << 3,
-    "string": 1 << 4,
-    "array": 1 << 5,
-    "object": 1 << 6,
-}
+# type code bits (shared canonical codes, see core.nodetypes)
+_TYPE_BIT = TYPE_BIT
 
 
 @dataclass
@@ -114,14 +121,39 @@ class _Loc:
 
 @dataclass
 class LocationTape:
-    """Flat tensor form of a compiled (structural-subset) schema."""
+    """Flat tensor form of a compiled (structural-subset) schema.
+
+    Assertion rows are stored **owner-sorted** (by ``(owner, group)``):
+    each location's rows occupy the contiguous CSR window
+    ``[loc_asrt_start[l], loc_asrt_start[l] + loc_asrt_len[l])``, with the
+    AND rows (group 0) first and each enum OR-group contiguous after them.
+    ``max_rows_per_loc`` (compile-time constant, "A-hat") bounds every
+    window, so the batched executor can evaluate a dense (nodes x A-hat)
+    gather instead of the full (nodes x A) matrix.
+
+    The property-transition table additionally carries a **hash-sorted
+    view** (``psort_*``): rows sorted lexicographically by their 8 hash
+    lanes, so all rows sharing one key hash form a contiguous run.  One
+    owner-blind ``hash_match`` per node finds the run start; the run is at
+    most ``max_hash_run`` (K) rows, and per-depth location propagation
+    reduces to an owner-equality check over those K candidates.
+    """
 
     n_locations: int
-    # property transition rows
+    max_loc_depth: int  # longest root path in the location DAG
+    # property transition rows (original emission order)
     prop_owner: np.ndarray  # int32 (M,)
     prop_hash: np.ndarray  # uint32 (M, 8)
     prop_child_loc: np.ndarray  # int32 (M,)
     prop_required_slot: np.ndarray  # int32 (M,)  -1 = not required
+    # hash-sorted view of the property table (candidate-set hashing)
+    psort_hash: np.ndarray  # uint32 (M, 8) lexicographically sorted lanes
+    psort_owner: np.ndarray  # int32 (M,)
+    psort_child_loc: np.ndarray  # int32 (M,)
+    psort_required_slot: np.ndarray  # int32 (M,)
+    psort_orig_row: np.ndarray  # int32 (M,) original row index (tie-break)
+    psort_run_len: np.ndarray  # int32 (M,) length of the equal-hash run
+    max_hash_run: int  # K: max rows sharing one key hash
     # per-location
     loc_closed: np.ndarray  # bool (L,)
     loc_addl: np.ndarray  # int32 (L,)  unmatched-property location / -1
@@ -131,7 +163,10 @@ class LocationTape:
     loc_prefix_len: np.ndarray  # int32 (L,)
     prefix_loc: np.ndarray  # int32 (P,)
     loc_required_mask: np.ndarray  # uint32 (L,)
-    # assertion rows
+    # assertion rows, owner-sorted CSR (see class docstring)
+    loc_asrt_start: np.ndarray  # int32 (L,) window start per location
+    loc_asrt_len: np.ndarray  # int32 (L,) window length per location
+    max_rows_per_loc: int  # A-hat: max window length over locations
     asrt_owner: np.ndarray  # int32 (A,)
     asrt_op: np.ndarray  # int32 (A,)
     asrt_group: np.ndarray  # int32 (A,)  0 = AND row, else OR-group id
@@ -265,13 +300,83 @@ class _TapeBuilder:
             prop_hash[r] = lanes
             prop_child[r] = child
             prop_slot[r] = slot
-        A = max(1, len(self.asrt_rows))
+
+        # hash-sorted view: rows sorted lexicographically by lanes so equal
+        # key hashes form contiguous runs (candidate sets for the single
+        # owner-blind hash_match pass).  Lane 0 is the primary sort key.
+        if self.prop_rows:
+            order = np.lexsort(tuple(prop_hash[:, k] for k in range(7, -1, -1)))
+            order = order.astype(np.int32)
+            psort_hash = prop_hash[order]
+            new_run = np.ones(M, bool)
+            new_run[1:] = np.any(psort_hash[1:] != psort_hash[:-1], axis=1)
+            run_id = np.cumsum(new_run) - 1
+            run_sizes = np.bincount(run_id)
+            psort_run_len = run_sizes[run_id].astype(np.int32)
+            max_hash_run = int(run_sizes.max())
+        else:
+            order = np.zeros(1, np.int32)
+            psort_hash = prop_hash
+            psort_run_len = np.zeros(M, np.int32)
+            max_hash_run = 0
+
+        # longest root path in the location DAG: all transition edges point
+        # to later-created locations, so one ascending DP pass suffices.
+        # Nodes deeper than max_loc_depth + 1 can only be untracked or
+        # under an already-invalid ancestor -- the executor truncates its
+        # propagation loop there (compile-time depth knowledge).
+        dist = np.zeros(max(1, L), np.int64)
+        children: List[List[int]] = [[] for _ in range(L)]
+        for owner, _lanes, child, _slot in self.prop_rows:
+            if child >= 0:
+                children[owner].append(child)
+        for loc in self.locs:
+            for v in (loc.addl_loc, loc.item_loc):
+                if v >= 0:
+                    children[loc.index].append(v)
+            children[loc.index].extend(loc.prefix_locs)
+        for u in range(L):
+            for v in children[u]:
+                if v > u:
+                    dist[v] = max(dist[v], dist[u] + 1)
+        max_loc_depth = int(dist.max())
+
+        # owner-sorted CSR assertion windows: stable sort by (owner, group)
+        # keeps AND rows (group 0) first and every OR-group contiguous
+        asrt_rows = self.asrt_rows
+        if asrt_rows:
+            a_owner = np.array([r["owner"] for r in asrt_rows], np.int32)
+            a_group = np.array([r["group"] for r in asrt_rows], np.int32)
+            a_order = np.lexsort((a_group, a_owner))
+            asrt_rows = [asrt_rows[i] for i in a_order]
+            sorted_owner = a_owner[a_order]
+            loc_asrt_len = np.bincount(sorted_owner, minlength=L).astype(np.int32)
+            loc_asrt_start = np.concatenate(
+                [[0], np.cumsum(loc_asrt_len[:-1])]
+            ).astype(np.int32)
+            max_rows_per_loc = int(loc_asrt_len.max())
+        else:
+            loc_asrt_len = np.zeros(max(1, L), np.int32)
+            loc_asrt_start = np.zeros(max(1, L), np.int32)
+            max_rows_per_loc = 0
+
         tape = LocationTape(
             n_locations=L,
+            max_loc_depth=max_loc_depth,
             prop_owner=prop_owner,
             prop_hash=prop_hash,
             prop_child_loc=prop_child,
             prop_required_slot=prop_slot,
+            psort_hash=psort_hash,
+            psort_owner=prop_owner[order],
+            psort_child_loc=prop_child[order],
+            psort_required_slot=prop_slot[order],
+            psort_orig_row=order,
+            psort_run_len=psort_run_len,
+            max_hash_run=max_hash_run,
+            loc_asrt_start=loc_asrt_start,
+            loc_asrt_len=loc_asrt_len,
+            max_rows_per_loc=max_rows_per_loc,
             loc_closed=np.array([l.closed for l in self.locs] or [False], bool),
             loc_addl=np.array([l.addl_loc for l in self.locs] or [-1], np.int32),
             loc_item=np.array([l.item_loc for l in self.locs] or [-1], np.int32),
@@ -287,15 +392,15 @@ class _TapeBuilder:
                 or [0],
                 np.uint32,
             ),
-            asrt_owner=np.array([r["owner"] for r in self.asrt_rows] or [-1], np.int32),
-            asrt_op=np.array([r["op"] for r in self.asrt_rows] or [0], np.int32),
-            asrt_group=np.array([r["group"] for r in self.asrt_rows] or [0], np.int32),
-            asrt_f0=np.array([r["f0"] for r in self.asrt_rows] or [0.0], np.float64),
-            asrt_i0=np.array([r["i0"] for r in self.asrt_rows] or [0], np.int32),
-            asrt_i1=np.array([r["i1"] for r in self.asrt_rows] or [0], np.int32),
-            asrt_u0=np.array([r["u0"] for r in self.asrt_rows] or [0], np.uint32),
-            asrt_u1=np.array([r["u1"] for r in self.asrt_rows] or [0], np.uint32),
-            asrt_hash=np.stack([r["lanes"] for r in self.asrt_rows] or [np.zeros(8, np.uint32)]),
+            asrt_owner=np.array([r["owner"] for r in asrt_rows] or [-1], np.int32),
+            asrt_op=np.array([r["op"] for r in asrt_rows] or [0], np.int32),
+            asrt_group=np.array([r["group"] for r in asrt_rows] or [0], np.int32),
+            asrt_f0=np.array([r["f0"] for r in asrt_rows] or [0.0], np.float64),
+            asrt_i0=np.array([r["i0"] for r in asrt_rows] or [0], np.int32),
+            asrt_i1=np.array([r["i1"] for r in asrt_rows] or [0], np.int32),
+            asrt_u0=np.array([r["u0"] for r in asrt_rows] or [0], np.uint32),
+            asrt_u1=np.array([r["u1"] for r in asrt_rows] or [0], np.uint32),
+            asrt_hash=np.stack([r["lanes"] for r in asrt_rows] or [np.zeros(8, np.uint32)]),
         )
         return tape
 

@@ -25,19 +25,9 @@ import numpy as np
 
 from ..core.doc_model import HashedObject
 from ..core.hashing import SHORT_LIMIT, hash_lanes, shash_bytes
+from ..core.nodetypes import TYPE_CODES
 
 __all__ = ["TokenTable", "encode_document", "encode_batch", "key_lanes", "TYPE_CODES"]
-
-# node type codes
-TYPE_CODES = {
-    "pad": 0,
-    "null": 1,
-    "boolean": 2,
-    "number": 3,
-    "string": 4,
-    "array": 5,
-    "object": 6,
-}
 
 _FNV_OFFSET = 0xCBF29CE484222325
 _FNV_PRIME = 0x100000001B3

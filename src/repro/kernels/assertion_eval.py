@@ -1,22 +1,26 @@
-"""Pallas TPU kernel: fused assertion-tape evaluation.
+"""Pallas TPU kernels: fused assertion-tape evaluation (dense + windowed).
 
-Evaluates every assertion row of a compiled location tape against every
-document node in one pass -- the tensorised version of the paper's CISC
-observation (§2.5): one *fused* pass over VMEM-resident columns beats
-dispatching many small instructions.
+Two kernels share one branch-free op evaluator (the tensorised version of
+the paper's CISC observation, §2.5 -- one *fused* pass over VMEM-resident
+columns beats dispatching many small instructions):
 
-The kernel computes a (nodes x assertion-rows) boolean matrix where entry
-(n, a) is "row a passes for node n" with the paper's *precondition*
-semantics baked in per op (wrong type => pass for AND rows, => no-match for
-OR/const rows).  Ownership masking (row applies only at its schema
-location) and group reduction happen in the surrounding jnp code -- they
-are cheap O(N*A) selects that XLA fuses.
+* **Dense** (``assertion_eval_pallas``): the historical layout.  Computes
+  the full (nodes x assertion-rows) boolean matrix; ownership masking and
+  OR-group reduction happen in the surrounding jnp code.  O(N*A) compute
+  and memory -- kept as the baseline and for tapes without CSR windows.
 
-All 17 mini-ISA ops are evaluated branch-free on (BN, BA) tiles and
-combined with a select chain on the op code -- the VPU is wide enough that
-computing all candidates costs less than divergent control flow would.
-float32 is used for numeric bounds on TPU (no native f64); the CPU
-reference path keeps f64.  Precision caveat recorded in DESIGN.md §7.
+* **Windowed** (``assertion_eval_window_pallas``): the CSR fast path.  The
+  executor gathers, per node, only the <= A-hat rows of the node's own
+  schema location (owner-sorted CSR windows built at compile time in
+  ``core.tape``) and hands them over as (nodes x A-hat) operand planes.
+  Every op evaluates element-wise on (BN, W) tiles -- O(N*A-hat) instead
+  of O(N*A), with no ownership masking needed downstream (a masked slot
+  carries op=-1 and evaluates to 0).
+
+Both kernels bake in the paper's *precondition* semantics per op (wrong
+type => pass for AND rows, => no-match for OR/const rows).  float32 is
+used for numeric bounds on TPU (no native f64); the CPU reference path
+keeps f64.  Precision caveat recorded in DESIGN.md §7.
 """
 
 from __future__ import annotations
@@ -27,46 +31,33 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core.nodetypes import (
+    T_ARR as _T_ARR,
+    T_BOOL as _T_BOOL,
+    T_NULL as _T_NULL,
+    T_NUM as _T_NUM,
+    T_OBJ as _T_OBJ,
+    T_STR as _T_STR,
+)
 from ..core.tape import AOP
 
 BLOCK_N = 256
 BLOCK_A = 256
+# windowed kernel: window (A-hat) padded to a sublane multiple
+WINDOW_ALIGN = 8
 
-# node type codes (mirrors data.doc_table.TYPE_CODES)
-_T_NULL, _T_BOOL, _T_NUM, _T_STR, _T_ARR, _T_OBJ = 1, 2, 3, 4, 5, 6
 
+def _eval_rows(ntype, isint, num, size, pfx0, pfx1, op, f0, i0, i1, u0, u1, hash_eq, out_shape):
+    """Branch-free mini-ISA evaluation shared by both kernel layouts.
 
-def _assertion_kernel(
-    # node columns, (BN, 1) each unless noted
-    n_type_ref,
-    n_isint_ref,
-    n_num_ref,
-    n_size_ref,
-    n_strhash_ref,  # (BN, 8) uint32
-    n_strpfx_ref,  # (BN, 2) uint32
-    # assertion columns, (BA, 1) each unless noted
-    a_op_ref,
-    a_f0_ref,
-    a_i0_ref,
-    a_i1_ref,
-    a_u0_ref,
-    a_u1_ref,
-    a_hash_ref,  # (BA, 8) uint32
-    out_ref,  # (BN, BA) int8
-):
-    ntype = n_type_ref[...]  # (BN, 1)
-    isint = n_isint_ref[...] != 0
-    num = n_num_ref[...]
-    size = n_size_ref[...]
-
-    op = a_op_ref[...].reshape(1, -1)  # (1, BA)
-    f0 = a_f0_ref[...].reshape(1, -1)
-    i0 = a_i0_ref[...].reshape(1, -1)
-    i1 = a_i1_ref[...].reshape(1, -1)
-    u0 = a_u0_ref[...].reshape(1, -1)
-    u1 = a_u1_ref[...].reshape(1, -1)
-
-    is_num = ntype == _T_NUM  # (BN, 1)
+    Node operands are (BN, 1); assertion operands are either (1, BA)
+    (dense) or (BN, W) (windowed); ``hash_eq`` is the 8-lane string-hash
+    equality matrix already broadcast to ``out_shape``.  All 17 candidate
+    results are computed unconditionally and combined with a select chain
+    on the op code -- the VPU is wide enough that computing all candidates
+    costs less than divergent control flow would.
+    """
+    is_num = ntype == _T_NUM
     is_str = ntype == _T_STR
     is_arr = ntype == _T_ARR
     is_obj = ntype == _T_OBJ
@@ -79,7 +70,7 @@ def _assertion_kernel(
     )
     r_type = jnp.logical_and(in_mask, ints_ok)
 
-    cmp_num = num  # (BN, 1) broadcast against (1, BA)
+    cmp_num = num
     r_ge = jnp.logical_or(~is_num, cmp_num >= f0)
     r_gt = jnp.logical_or(~is_num, cmp_num > f0)
     r_le = jnp.logical_or(~is_num, cmp_num <= f0)
@@ -97,11 +88,8 @@ def _assertion_kernel(
 
     # STR_PREFIX: compare first i0 (<=8) bytes; big-endian packing makes a
     # left-aligned byte mask expressible as integer shifts
-    pfx0 = n_strpfx_ref[:, 0].reshape(-1, 1)
-    pfx1 = n_strpfx_ref[:, 1].reshape(-1, 1)
     len0 = jnp.minimum(i0, 4)
     len1 = jnp.maximum(i0 - 4, 0)
-    # mask of the first k bytes of a big-endian u32 (k in 0..4)
     shift0 = (jnp.int32(4) - len0) * 8
     shift1 = (jnp.int32(4) - len1) * 8
     full = jnp.uint32(0xFFFFFFFF)
@@ -112,14 +100,9 @@ def _assertion_kernel(
     r_prefix = jnp.logical_or(~is_str, jnp.logical_and(pfx_eq, long_enough))
 
     # STR_EQ / const rows: exact-match semantics (no pass-on-skip)
-    str_eq = is_str
-    for lane in range(8):
-        nh = n_strhash_ref[:, lane].reshape(-1, 1)
-        ah = a_hash_ref[:, lane].reshape(1, -1)
-        str_eq = jnp.logical_and(str_eq, nh == ah)
-    r_str_eq = str_eq
-    r_str_eq_pre = jnp.logical_or(jnp.broadcast_to(~is_str, str_eq.shape), str_eq)
-    r_null = jnp.broadcast_to(ntype == _T_NULL, str_eq.shape)
+    r_str_eq = jnp.logical_and(jnp.broadcast_to(is_str, out_shape), hash_eq)
+    r_str_eq_pre = jnp.logical_or(jnp.broadcast_to(~is_str, out_shape), hash_eq)
+    r_null = jnp.broadcast_to(ntype == _T_NULL, out_shape)
     is_bool = ntype == _T_BOOL
     r_bool = jnp.logical_and(is_bool, num == f0)
     r_num_const = jnp.logical_and(is_num, num == f0)
@@ -144,9 +127,59 @@ def _assertion_kernel(
         (AOP.CONST_NUM, r_num_const),
         (AOP.STR_EQ_PRE, r_str_eq_pre),
     ]
-    result = jnp.zeros(out_ref.shape, jnp.bool_)
+    result = jnp.zeros(out_shape, jnp.bool_)
     for code, value in candidates:
-        result = jnp.where(op == code, jnp.broadcast_to(value, result.shape), result)
+        result = jnp.where(op == code, jnp.broadcast_to(value, out_shape), result)
+    return result
+
+
+# ---------------------------------------------------------------------------
+# Dense kernel: (nodes x all-assertion-rows)
+# ---------------------------------------------------------------------------
+
+
+def _assertion_kernel(
+    # node columns, (BN, 1) each unless noted
+    n_type_ref,
+    n_isint_ref,
+    n_num_ref,
+    n_size_ref,
+    n_strhash_ref,  # (BN, 8) uint32
+    n_strpfx_ref,  # (BN, 2) uint32
+    # assertion columns, (BA, 1) each unless noted
+    a_op_ref,
+    a_f0_ref,
+    a_i0_ref,
+    a_i1_ref,
+    a_u0_ref,
+    a_u1_ref,
+    a_hash_ref,  # (BA, 8) uint32
+    out_ref,  # (BN, BA) int8
+):
+    ntype = n_type_ref[...]  # (BN, 1)
+    isint = n_isint_ref[...] != 0
+    num = n_num_ref[...]
+    size = n_size_ref[...]
+    pfx0 = n_strpfx_ref[:, 0].reshape(-1, 1)
+    pfx1 = n_strpfx_ref[:, 1].reshape(-1, 1)
+
+    op = a_op_ref[...].reshape(1, -1)  # (1, BA)
+    f0 = a_f0_ref[...].reshape(1, -1)
+    i0 = a_i0_ref[...].reshape(1, -1)
+    i1 = a_i1_ref[...].reshape(1, -1)
+    u0 = a_u0_ref[...].reshape(1, -1)
+    u1 = a_u1_ref[...].reshape(1, -1)
+
+    # eight rank-2 lane-equality comparisons, statically unrolled
+    hash_eq = jnp.ones(out_ref.shape, jnp.bool_)
+    for lane in range(8):
+        nh = n_strhash_ref[:, lane].reshape(-1, 1)
+        ah = a_hash_ref[:, lane].reshape(1, -1)
+        hash_eq = jnp.logical_and(hash_eq, nh == ah)
+
+    result = _eval_rows(
+        ntype, isint, num, size, pfx0, pfx1, op, f0, i0, i1, u0, u1, hash_eq, out_ref.shape
+    )
     out_ref[...] = result.astype(jnp.int8)
 
 
@@ -208,5 +241,123 @@ def assertion_eval_pallas(
         col2d(asrt_cols["u0"]),
         col2d(asrt_cols["u1"]),
         asrt_cols["hash"],
+    )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Windowed kernel: (nodes x A-hat) pre-gathered CSR windows
+# ---------------------------------------------------------------------------
+
+
+def _assertion_window_kernel(
+    # node columns, (BN, 1) each unless noted
+    n_type_ref,
+    n_isint_ref,
+    n_num_ref,
+    n_size_ref,
+    n_strhash_ref,  # (BN, 8) uint32
+    n_strpfx_ref,  # (BN, 2) uint32
+    # per-node windowed assertion operands, (BN, W) each unless noted
+    a_op_ref,
+    a_f0_ref,
+    a_i0_ref,
+    a_i1_ref,
+    a_u0_ref,
+    a_u1_ref,
+    a_hash_ref,  # (BN, 8*W) uint32, lane-major: columns [lane*W, (lane+1)*W)
+    out_ref,  # (BN, W) int8
+    *,
+    window: int,
+):
+    ntype = n_type_ref[...]  # (BN, 1)
+    isint = n_isint_ref[...] != 0
+    num = n_num_ref[...]
+    size = n_size_ref[...]
+    pfx0 = n_strpfx_ref[:, 0].reshape(-1, 1)
+    pfx1 = n_strpfx_ref[:, 1].reshape(-1, 1)
+
+    op = a_op_ref[...]  # (BN, W)
+    f0 = a_f0_ref[...]
+    i0 = a_i0_ref[...]
+    i1 = a_i1_ref[...]
+    u0 = a_u0_ref[...]
+    u1 = a_u1_ref[...]
+
+    # eight element-wise lane comparisons on static (BN, W) slices
+    hash_eq = jnp.ones(out_ref.shape, jnp.bool_)
+    for lane in range(8):
+        nh = n_strhash_ref[:, lane].reshape(-1, 1)
+        ah = a_hash_ref[:, lane * window : (lane + 1) * window]
+        hash_eq = jnp.logical_and(hash_eq, nh == ah)
+
+    result = _eval_rows(
+        ntype, isint, num, size, pfx0, pfx1, op, f0, i0, i1, u0, u1, hash_eq, out_ref.shape
+    )
+    out_ref[...] = result.astype(jnp.int8)
+
+
+def assertion_eval_window_pallas(
+    node_cols: dict,
+    w_cols: dict,
+    *,
+    block_n: int = BLOCK_N,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (N, W) int8 pass matrix for pre-gathered CSR windows.
+
+    node_cols: type/is_int/num/size (N,), str_hash (N,8), str_prefix (N,2)
+    w_cols: op/f0/i0/i1/u0/u1 (N, W), hash (N, W, 8).  Masked window slots
+    must carry op=-1 (evaluate to 0).  Caller pads N to a block multiple
+    and W to a sublane multiple.
+    """
+    n = node_cols["type"].shape[0]
+    w = w_cols["op"].shape[1]
+    assert n % block_n == 0 and w % WINDOW_ALIGN == 0, (n, w)
+    grid = (n // block_n,)
+
+    def col2d(x):
+        return x.reshape(-1, 1)
+
+    # lane-major hash layout keeps every kernel slice static and rank-2
+    hash_lm = jnp.transpose(w_cols["hash"], (0, 2, 1)).reshape(n, 8 * w)
+
+    n_spec = pl.BlockSpec((block_n, 1), lambda i: (i, 0))
+    w_spec = pl.BlockSpec((block_n, w), lambda i: (i, 0))
+    out = pl.pallas_call(
+        functools.partial(_assertion_window_kernel, window=w),
+        grid=grid,
+        in_specs=[
+            n_spec,
+            n_spec,
+            n_spec,
+            n_spec,
+            pl.BlockSpec((block_n, 8), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, 2), lambda i: (i, 0)),
+            w_spec,
+            w_spec,
+            w_spec,
+            w_spec,
+            w_spec,
+            w_spec,
+            pl.BlockSpec((block_n, 8 * w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, w), jnp.int8),
+        interpret=interpret,
+    )(
+        col2d(node_cols["type"].astype(jnp.int32)),
+        col2d(node_cols["is_int"].astype(jnp.int32)),
+        col2d(node_cols["num"]),
+        col2d(node_cols["size"].astype(jnp.int32)),
+        node_cols["str_hash"],
+        node_cols["str_prefix"],
+        w_cols["op"].astype(jnp.int32),
+        w_cols["f0"],
+        w_cols["i0"].astype(jnp.int32),
+        w_cols["i1"].astype(jnp.int32),
+        w_cols["u0"],
+        w_cols["u1"],
+        hash_lm,
     )
     return out

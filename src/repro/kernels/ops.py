@@ -17,7 +17,7 @@ from . import assertion_eval as _ae
 from . import hash_match as _hm
 from . import ref as _ref
 
-__all__ = ["hash_match", "assertion_eval"]
+__all__ = ["hash_match", "assertion_eval", "assertion_eval_window"]
 
 
 def _interpret_default() -> bool:
@@ -98,3 +98,38 @@ def assertion_eval(
         node_pad, asrt_pad, block_n=block_n, block_a=block_a, interpret=interpret
     )
     return out[:n, :a]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "use_pallas", "interpret")
+)
+def assertion_eval_window(
+    node_cols: dict,
+    w_cols: dict,
+    *,
+    block_n: int = _ae.BLOCK_N,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(N, W) int8 pass matrix over pre-gathered CSR windows.
+
+    ``w_cols`` holds per-node windowed operands (op/f0/i0/i1/u0/u1 of
+    shape (N, W), hash of shape (N, W, 8)); masked slots must carry op=-1.
+    """
+    if not use_pallas:
+        return _ref.assertion_eval_window_ref(node_cols, w_cols)
+    interpret = _interpret_default() if interpret is None else interpret
+    n = node_cols["type"].shape[0]
+    w = w_cols["op"].shape[1]
+    np_ = _round_up(n, block_n)
+    wp = _round_up(w, _ae.WINDOW_ALIGN)
+    node_pad = {k: _pad_to(v, np_) for k, v in node_cols.items()}
+    # padded slots get op -1 -> never selected -> result 0
+    w_pad = {}
+    for k, v in w_cols.items():
+        v = _pad_to(v, np_, axis=0)
+        w_pad[k] = _pad_to(v, wp, axis=1, fill=(-1 if k == "op" else 0))
+    out = _ae.assertion_eval_window_pallas(
+        node_pad, w_pad, block_n=block_n, interpret=interpret
+    )
+    return out[:n, :w]

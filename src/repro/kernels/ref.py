@@ -5,9 +5,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..core.nodetypes import (
+    T_ARR as _T_ARR,
+    T_BOOL as _T_BOOL,
+    T_NULL as _T_NULL,
+    T_NUM as _T_NUM,
+    T_OBJ as _T_OBJ,
+    T_STR as _T_STR,
+)
 from ..core.tape import AOP
-
-_T_NULL, _T_BOOL, _T_NUM, _T_STR, _T_ARR, _T_OBJ = 1, 2, 3, 4, 5, 6
 
 
 def hash_match_ref(
@@ -25,22 +31,13 @@ def hash_match_ref(
     return jnp.where(best >= big, jnp.int32(-1), best)
 
 
-def assertion_eval_ref(node_cols: dict, asrt_cols: dict) -> jax.Array:
-    """(N, A) int8 pass matrix -- mirror of assertion_eval.py semantics."""
-    ntype = node_cols["type"].astype(jnp.int32)[:, None]  # (N, 1)
-    isint = node_cols["is_int"].astype(bool)[:, None]
-    num = node_cols["num"][:, None]
-    size = node_cols["size"].astype(jnp.int32)[:, None]
-    str_hash = node_cols["str_hash"]  # (N, 8)
-    str_pfx = node_cols["str_prefix"]  # (N, 2)
+def _eval_rows_ref(ntype, isint, num, size, str_pfx0, str_pfx1, op, f0, i0, i1, u0, u1, hash_eq):
+    """Mini-ISA row evaluation on already-broadcastable operands.
 
-    op = asrt_cols["op"].astype(jnp.int32)[None, :]  # (1, A)
-    f0 = asrt_cols["f0"][None, :]
-    i0 = asrt_cols["i0"].astype(jnp.int32)[None, :]
-    i1 = asrt_cols["i1"].astype(jnp.int32)[None, :]
-    u0 = asrt_cols["u0"][None, :]
-    u1 = asrt_cols["u1"][None, :]
-    a_hash = asrt_cols["hash"]  # (A, 8)
+    ``hash_eq`` carries the 8-lane string-hash equality at the output
+    shape; node operands are (N, 1), assertion operands (1, A) or (N, W).
+    """
+    out_shape = hash_eq.shape
 
     is_num = ntype == _T_NUM
     is_str = ntype == _T_STR
@@ -71,17 +68,16 @@ def assertion_eval_ref(node_cols: dict, asrt_cols: dict) -> jax.Array:
     full = jnp.uint32(0xFFFFFFFF)
     m0 = jnp.where(len0 == 0, jnp.uint32(0), (full >> shift0) << shift0)
     m1 = jnp.where(len1 == 0, jnp.uint32(0), (full >> shift1) << shift1)
-    pfx_eq = ((str_pfx[:, 0:1] & m0) == (u0 & m0)) & ((str_pfx[:, 1:2] & m1) == (u1 & m1))
+    pfx_eq = ((str_pfx0 & m0) == (u0 & m0)) & ((str_pfx1 & m1) == (u1 & m1))
     r_prefix = ~is_str | (pfx_eq & (size >= i0))
 
-    str_eq = jnp.all(str_hash[:, None, :] == a_hash[None, :, :], axis=-1)
-    r_str_eq = is_str & str_eq
-    r_str_eq_pre = ~is_str | str_eq
-    r_null = jnp.broadcast_to(ntype == _T_NULL, r_str_eq.shape)
+    r_str_eq = jnp.broadcast_to(is_str, out_shape) & hash_eq
+    r_str_eq_pre = jnp.broadcast_to(~is_str, out_shape) | hash_eq
+    r_null = jnp.broadcast_to(ntype == _T_NULL, out_shape)
     r_bool = (ntype == _T_BOOL) & (num == f0)
     r_num_const = is_num & (num == f0)
 
-    result = jnp.zeros(r_str_eq.shape, bool)
+    result = jnp.zeros(out_shape, bool)
     for code, value in [
         (AOP.TYPE_MASK, r_type),
         (AOP.NUM_GE, r_ge),
@@ -102,5 +98,60 @@ def assertion_eval_ref(node_cols: dict, asrt_cols: dict) -> jax.Array:
         (AOP.CONST_NUM, r_num_const),
         (AOP.STR_EQ_PRE, r_str_eq_pre),
     ]:
-        result = jnp.where(op == code, jnp.broadcast_to(value, result.shape), result)
+        result = jnp.where(op == code, jnp.broadcast_to(value, out_shape), result)
+    return result
+
+
+def assertion_eval_ref(node_cols: dict, asrt_cols: dict) -> jax.Array:
+    """(N, A) int8 pass matrix -- mirror of the dense Pallas kernel."""
+    ntype = node_cols["type"].astype(jnp.int32)[:, None]  # (N, 1)
+    isint = node_cols["is_int"].astype(bool)[:, None]
+    num = node_cols["num"][:, None]
+    size = node_cols["size"].astype(jnp.int32)[:, None]
+    str_hash = node_cols["str_hash"]  # (N, 8)
+    str_pfx = node_cols["str_prefix"]  # (N, 2)
+
+    op = asrt_cols["op"].astype(jnp.int32)[None, :]  # (1, A)
+    f0 = asrt_cols["f0"][None, :]
+    i0 = asrt_cols["i0"].astype(jnp.int32)[None, :]
+    i1 = asrt_cols["i1"].astype(jnp.int32)[None, :]
+    u0 = asrt_cols["u0"][None, :]
+    u1 = asrt_cols["u1"][None, :]
+    a_hash = asrt_cols["hash"]  # (A, 8)
+
+    hash_eq = jnp.all(str_hash[:, None, :] == a_hash[None, :, :], axis=-1)  # (N, A)
+    result = _eval_rows_ref(
+        ntype, isint, num, size, str_pfx[:, 0:1], str_pfx[:, 1:2],
+        op, f0, i0, i1, u0, u1, hash_eq,
+    )
+    return result.astype(jnp.int8)
+
+
+def assertion_eval_window_ref(node_cols: dict, w_cols: dict) -> jax.Array:
+    """(N, W) int8 pass matrix -- mirror of the windowed Pallas kernel.
+
+    ``w_cols`` holds per-node gathered CSR-window operands: op/f0/i0/i1/
+    u0/u1 of shape (N, W) and hash of shape (N, W, 8).  Masked slots carry
+    op=-1 and evaluate to 0.
+    """
+    ntype = node_cols["type"].astype(jnp.int32)[:, None]  # (N, 1)
+    isint = node_cols["is_int"].astype(bool)[:, None]
+    num = node_cols["num"][:, None]
+    size = node_cols["size"].astype(jnp.int32)[:, None]
+    str_hash = node_cols["str_hash"]  # (N, 8)
+    str_pfx = node_cols["str_prefix"]  # (N, 2)
+
+    op = w_cols["op"].astype(jnp.int32)  # (N, W)
+    f0 = w_cols["f0"]
+    i0 = w_cols["i0"].astype(jnp.int32)
+    i1 = w_cols["i1"].astype(jnp.int32)
+    u0 = w_cols["u0"]
+    u1 = w_cols["u1"]
+    w_hash = w_cols["hash"]  # (N, W, 8)
+
+    hash_eq = jnp.all(str_hash[:, None, :] == w_hash, axis=-1)  # (N, W)
+    result = _eval_rows_ref(
+        ntype, isint, num, size, str_pfx[:, 0:1], str_pfx[:, 1:2],
+        op, f0, i0, i1, u0, u1, hash_eq,
+    )
     return result.astype(jnp.int8)

@@ -23,7 +23,11 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional: fall back to uncompressed leaves when unavailable
+    import zstandard
+except ImportError:  # pragma: no cover
+    zstandard = None
 
 Params = Any
 
@@ -80,12 +84,12 @@ class CheckpointManager:
 
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
-        cctx = zstandard.ZstdCompressor(level=3)
+        cctx = zstandard.ZstdCompressor(level=3) if zstandard is not None else None
         manifest = {"step": step, "leaves": []}
         for i, (key, arr) in enumerate(host):
             raw = np.ascontiguousarray(arr).tobytes()
-            payload = cctx.compress(raw)
-            fname = f"leaf_{i:05d}.bin.zst"
+            payload = cctx.compress(raw) if cctx is not None else raw
+            fname = f"leaf_{i:05d}.bin.zst" if cctx is not None else f"leaf_{i:05d}.bin"
             (tmp / fname).write_bytes(payload)
             manifest["leaves"].append(
                 {
@@ -143,7 +147,7 @@ class CheckpointManager:
         path = self.dir / f"step_{step:010d}"
         manifest = msgpack.unpackb((path / "manifest.msgpack").read_bytes())
         by_key: Dict[str, dict] = {m["key"]: m for m in manifest["leaves"]}
-        dctx = zstandard.ZstdDecompressor()
+        dctx = zstandard.ZstdDecompressor() if zstandard is not None else None
 
         flat, treedef = _flatten(like)
         shard_flat = None
@@ -152,10 +156,19 @@ class CheckpointManager:
         leaves = []
         for i, (key, template) in enumerate(flat):
             meta = by_key[key]
-            raw = dctx.decompress(
-                (path / meta["file"]).read_bytes(),
-                max_output_size=int(np.prod(meta["shape"] or [1])) * 16 + 64,
-            )
+            payload = (path / meta["file"]).read_bytes()
+            if meta["file"].endswith(".zst"):
+                if dctx is None:
+                    raise IOError(
+                        "checkpoint uses zstd compression but zstandard is "
+                        "not installed"
+                    )
+                raw = dctx.decompress(
+                    payload,
+                    max_output_size=int(np.prod(meta["shape"] or [1])) * 16 + 64,
+                )
+            else:
+                raw = payload
             if strict_integrity and (zlib.crc32(raw) & 0xFFFFFFFF) != meta["crc32"]:
                 raise IOError(f"checkpoint corruption in leaf {key} (crc mismatch)")
             arr = np.frombuffer(raw, dtype=meta["dtype"]).reshape(meta["shape"])

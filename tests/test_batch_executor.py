@@ -3,6 +3,8 @@ sequential oracle on the structural schema subset."""
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed in this environment")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Validator, compile_schema

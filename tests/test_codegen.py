@@ -2,6 +2,8 @@
 on the full conformance corpus and on random schema/document pairs."""
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed in this environment")
 from hypothesis import given, settings
 
 from repro.core import NaiveValidator, Validator, compile_schema

@@ -5,6 +5,8 @@ regex specialization (§4.3), compiler heuristics (§4.2/§4.4), CISC fusion
 import re
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed in this environment")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import CompilerOptions, compile_schema

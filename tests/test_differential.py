@@ -6,6 +6,8 @@ interpreter are two independent implementations of the same spec -- on any
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed in this environment")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import CompilerOptions, NaiveValidator, Validator, compile_schema
