@@ -5,6 +5,7 @@ One module per paper table/figure:
   compile_time -- Figure 5 (compile time vs schema size)
   ablations    -- Figure 7 (per-optimization contribution)
   batched      -- beyond-paper TPU-form executor + coverage
+  registry     -- beyond-paper multi-tenant mixed traffic (linked tape)
   roofline     -- §Roofline terms from the dry-run artifacts
 
 Prints ``name,us_per_call,derived`` CSV lines and writes the full report
@@ -25,13 +26,14 @@ RESULTS = Path(__file__).resolve().parents[1] / "results"
 
 
 def main() -> None:
-    from . import ablations, batched, compile_time, roofline, validation
+    from . import ablations, batched, compile_time, registry, roofline, validation
 
     modules = [
         ("validation", validation),
         ("compile_time", compile_time),
         ("ablations", ablations),
         ("batched", batched),
+        ("registry", registry),
         ("roofline", roofline),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None

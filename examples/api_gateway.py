@@ -1,8 +1,11 @@
-"""API-gateway serving: Blaze request admission + batched LM decode.
+"""Multi-tenant API gateway: one linked tape validating every endpoint.
 
-The paper's deployment scenario end-to-end: every request is validated
-against the request schema on the critical path, then served by a small
-LM with continuous batching.
+The paper's deployment scenario end-to-end, at gateway scale: the
+schema registry hosts several endpoint request schemas (completions,
+chat, embeddings, moderation -- plus the kitchen-sink default), the tape
+linker fuses their location tapes into ONE linked tape, and a mixed
+request burst is admitted in a single batched validation launch before
+the expensive work (LM decode with continuous batching).
 
 Run: PYTHONPATH=src python examples/api_gateway.py
 """
@@ -13,6 +16,7 @@ import jax
 
 from repro.configs import get_config
 from repro.models import Model
+from repro.registry.presets import GATEWAY_SCHEMAS
 from repro.serve.engine import ServeConfig, ServeEngine
 
 
@@ -21,35 +25,77 @@ def main() -> None:
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     engine = ServeEngine(
-        cfg, params, ServeConfig(batch_slots=2, max_len=96, default_max_tokens=8)
+        cfg,
+        params,
+        ServeConfig(batch_slots=2, max_len=96, default_max_tokens=8),
+        endpoint_schemas=GATEWAY_SCHEMAS,
     )
 
-    requests = [
-        {"prompt": "The paper introduces", "max_tokens": 6},
-        {"prompt": "JSON Schema validation is", "max_tokens": 6},
-        {"prompt": ""},                                # invalid: minLength
-        {"prompt": "ok", "max_tokens": 100000},        # invalid: maximum
-        {"prompt": "Compilers amortize", "temperature": 0.2, "max_tokens": 6},
-        {"prompt": "hi", "unexpected": True},          # invalid: closed
-    ]
-    ids = {}
-    for req in requests:
-        rid, err = engine.submit(json.dumps(req))
-        status = f"admitted id={rid}" if rid is not None else f"rejected ({err})"
-        print(f"  {status:40s} {json.dumps(req)[:60]}")
-        if rid is not None:
-            ids[rid] = req["prompt"]
+    linked = engine.registry.linked_tape()
+    print(
+        f"registry: {len(engine.registry.endpoints())} endpoints; linked tape "
+        f"members={list(linked.members)} locations={linked.n_locations} "
+        f"assertions={linked.n_assertions} A-hat={linked.max_rows_per_loc} "
+        f"K={linked.max_hash_run}"
+    )
+    for ep in engine.registry.endpoints():
+        st = engine.registry.get(ep).stats
+        mode = "linked-tape" if st.batchable else f"sequential ({st.fallback_reason})"
+        print(f"  {ep:10s} v{engine.registry.get(ep).version} "
+              f"compile={st.compile_seconds*1e3:.1f}ms -> {mode}")
 
-    results = engine.run_until_drained(max_steps=128)
+    # one mixed burst through ONE batched validation launch
+    burst = [
+        ("complete", {"prompt": "The paper introduces", "max_tokens": 6}),
+        ("chat", {"messages": [{"role": "user", "content": "Compilers amortize"}],
+                  "max_tokens": 6}),
+        ("embed", {"input": "schema validation"}),
+        ("moderate", {"input": "hello there", "category": "spam"}),
+        ("complete", {"prompt": ""}),                       # invalid: minLength
+        ("chat", {"messages": []}),                         # invalid: minItems
+        ("embed", {"input": "x", "dimensions": 2}),         # invalid: minimum
+        ("moderate", {"input": "hi", "category": "other"}), # invalid: enum
+        ("complete", {"prompt": "ok", "max_tokens": 100000}),  # invalid: maximum
+        ("default", {"prompt": "JSON Schema validation is", "max_tokens": 6,
+                     "metadata": {"tenant": "acme"}}),      # sequential member
+        ("chat", {"messages": [{"role": "user", "content": "hi"},
+                               {"role": "assistant", "content": "hello"}],
+                  "max_tokens": 6}),
+    ]
+    results = engine.submit_batch([(ep, json.dumps(req)) for ep, req in burst])
+    ids = {}
+    for (ep, req), (rid, err) in zip(burst, results):
+        status = f"admitted id={rid}" if rid is not None else f"rejected ({err})"
+        print(f"  {ep:10s} {status:32s} {json.dumps(req)[:48]}")
+        if rid is not None:
+            ids[rid] = ep
+
+    completions = engine.run_until_drained(max_steps=128)
     print("\ncompletions (byte-level model, untrained -- shapes not prose):")
-    for rid, prompt in ids.items():
-        print(f"  [{rid}] {prompt!r} -> {results.get(rid, '')!r}")
+    for rid, ep in ids.items():
+        print(f"  [{rid}] {ep:10s} -> {completions.get(rid, '')!r}")
+
     s = engine.stats
     print(
         f"\nstats: received={s.received} admitted={s.admitted} rejected={s.rejected} "
-        f"completed={s.completed} decode_steps={s.decode_steps} "
+        f"completed={s.completed} decode_steps={s.decode_steps}\n"
+        f"       batch_validated={s.batch_validated} "
+        f"fallback_validated={s.fallback_validated} "
         f"validation={s.validation_seconds*1e6:.0f}us total"
     )
+    print(f"       by_endpoint={s.by_endpoint}")
+
+    # hot-swap: tighten the moderation schema; re-link is incremental
+    moderate_v2 = dict(GATEWAY_SCHEMAS["moderate"])
+    moderate_v2["properties"] = dict(
+        moderate_v2["properties"], category={"enum": ["toxicity", "violence"]}
+    )
+    engine.registry.register("moderate", moderate_v2)
+    rid, err = engine.submit(
+        json.dumps({"input": "hi", "category": "spam"}), endpoint="moderate"
+    )
+    print(f"\nafter hot-swap to moderate v2: spam category -> "
+          f"{'admitted' if rid is not None else f'rejected ({err})'}")
 
 
 if __name__ == "__main__":

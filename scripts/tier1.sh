@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the exact command the roadmap pins (ROADMAP.md).
+# Usage: scripts/tier1.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

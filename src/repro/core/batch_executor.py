@@ -1,7 +1,11 @@
 """Batched, TPU-native schema validation over token tables.
 
 Validates B documents against one compiled location tape in a handful of
-large tensor ops:
+large tensor ops.  The tape may be a multi-member *linked* tape
+(``registry/linker.py``): per-document ``schema_ids`` seed each root
+from ``tape.roots`` and the hash pass becomes member-windowed, so one
+kernel launch validates a heterogeneous (multi-schema) batch
+bit-identically to per-schema dispatch (DESIGN.md §8).  The pipeline:
 
 1. **Location propagation** -- one owner-blind ``hash_match`` pass over
    all B*N nodes finds each node's *candidate set*: the contiguous run of
@@ -70,13 +74,21 @@ def _tape_consts(tape: LocationTape) -> Dict[str, jnp.ndarray]:
         "psort_required_slot": jnp.asarray(tape.psort_required_slot),
         "psort_orig_row": jnp.asarray(tape.psort_orig_row),
         "psort_run_len": jnp.asarray(tape.psort_run_len),
-        "loc_closed": jnp.asarray(tape.loc_closed),
-        "loc_addl": jnp.asarray(tape.loc_addl),
-        "loc_item": jnp.asarray(tape.loc_item),
-        "loc_item_start": jnp.asarray(tape.loc_item_start),
-        "loc_prefix_start": jnp.asarray(tape.loc_prefix_start),
-        "loc_prefix_len": jnp.asarray(tape.loc_prefix_len),
         "prefix_loc": jnp.asarray(tape.prefix_loc),
+        # packed per-location structural row: one gather per depth
+        # iteration instead of six (addl, closed, item, item_start,
+        # prefix_start, prefix_len)
+        "loc_struct": jnp.stack(
+            [
+                jnp.asarray(tape.loc_addl),
+                jnp.asarray(tape.loc_closed.astype(np.int32)),
+                jnp.asarray(tape.loc_item),
+                jnp.asarray(tape.loc_item_start),
+                jnp.asarray(tape.loc_prefix_start),
+                jnp.asarray(tape.loc_prefix_len),
+            ],
+            axis=1,
+        ),
         "loc_required_mask": jnp.asarray(tape.loc_required_mask.astype(np.int32)),
         "loc_asrt_start": jnp.asarray(tape.loc_asrt_start),
         "loc_asrt_len": jnp.asarray(tape.loc_asrt_len),
@@ -89,6 +101,11 @@ def _tape_consts(tape: LocationTape) -> Dict[str, jnp.ndarray]:
         "asrt_u0": jnp.asarray(tape.asrt_u0),
         "asrt_u1": jnp.asarray(tape.asrt_u1),
         "asrt_hash": jnp.asarray(tape.asrt_hash),
+        "psort_member": jnp.asarray(tape.psort_member),
+        "roots": jnp.asarray(tape.roots),
+        "member_horizons": jnp.asarray(tape.member_horizons),
+        "member_prop_start": jnp.asarray(tape.member_prop_start),
+        "member_prop_len": jnp.asarray(tape.member_prop_len),
     }
 
 
@@ -112,6 +129,7 @@ class BatchValidator:
         # compile-time window bounds (clamped: the kernels need >= 1 slot)
         self.n_window = max(1, tape.max_rows_per_loc)
         self.k_cand = max(1, tape.max_hash_run)
+        self.m_hat = max(1, tape.max_member_props)
         self._consts = _tape_consts(tape)
         self._fn = jax.jit(
             functools.partial(
@@ -123,24 +141,54 @@ class BatchValidator:
                 layout=layout,
                 n_window=self.n_window,
                 k_cand=self.k_cand,
+                m_hat=self.m_hat,
+                n_members=tape.n_members,
             )
         )
 
-    def validate(self, table) -> Tuple[np.ndarray, np.ndarray]:
+    def validate(self, table, schema_ids=None) -> Tuple[np.ndarray, np.ndarray]:
         """Returns (valid, decided) boolean arrays of shape (B,).
+
+        ``schema_ids`` selects each document's member of a linked tape
+        (``registry/linker.py``): document b's root node is seeded with
+        ``tape.roots[schema_ids[b]]``.  Single-member tapes (the default)
+        accept the implicit all-zeros vector.
 
         ``decided=False`` rows exceeded the encoder budget *or* contain
         nodes deeper than this validator's ``max_depth`` (which the
         location loop never reaches); both must be routed to the
         sequential executor -- their ``valid`` entry is meaningless.
         """
+        B = table.batch
+        if schema_ids is None:
+            if self.tape.n_members > 1:
+                raise ValueError(
+                    "linked tape: per-document schema_ids are required "
+                    "(member 0 would otherwise be guessed silently)"
+                )
+            ids = np.zeros(B, np.int32)
+        else:
+            ids = np.asarray(schema_ids, np.int32)
+            if ids.shape != (B,):
+                raise ValueError(f"schema_ids shape {ids.shape} != ({B},)")
+            if ids.size and (ids.min() < 0 or ids.max() >= self.tape.n_members):
+                raise ValueError("schema_ids outside the tape's member range")
         cols = {k: jnp.asarray(v) for k, v in table.columns().items()}
-        valid, in_depth = self._fn(cols)
+        valid, in_depth = self._fn(cols, jnp.asarray(ids))
         return np.asarray(valid), np.asarray(in_depth) & np.asarray(table.ok)
 
 
 def _propagate_locations(
-    cols, consts, *, loop_depth: int, use_pallas: bool, layout: str, k_cand: int
+    cols,
+    schema_ids,
+    consts,
+    *,
+    loop_depth: int,
+    use_pallas: bool,
+    layout: str,
+    k_cand: int,
+    m_hat: int,
+    n_members: int,
 ):
     """Assign every node a schema location; returns (loc, acquired, aux).
 
@@ -160,28 +208,62 @@ def _propagate_locations(
 
     is_pad = node_type == 0
 
+    # each document's root is its schema member's root location (plain
+    # location 0 for single-member tapes)
+    member = jnp.repeat(schema_ids.astype(jnp.int32), N)  # (B*N,)
     loc = jnp.where(
         jnp.arange(B * N, dtype=jnp.int32) % N == 0,
-        jnp.int32(0),
+        consts["roots"][member],
         jnp.int32(-1),
     )
     acquired = jnp.zeros(B * N, jnp.int32)  # required-slot bits per object
 
+    # loop-invariant node classification, shared by the hoisted hash pass
+    # and the depth loop (one definition so they can never desynchronize)
+    is_real = ~is_pad & (parent >= 0)
+    parent_type = node_type[parent_flat]
+    is_member_node = is_real & (parent_type == _T_OBJ)
+    is_item_node = is_real & (parent_type == _T_ARR)
+
     if layout == "csr":
-        # -- hoisted single hash pass: owner-blind match over the
-        # hash-sorted table finds each member node's candidate-run start
-        is_member_all = ~is_pad & (parent >= 0) & (node_type[parent_flat] == _T_OBJ)
-        # real rows match on owner 0; the empty-table placeholder (owner
-        # -1) keeps a sentinel so all-zero key lanes cannot hit it
-        t_owner0 = jnp.where(consts["psort_owner"] >= 0, jnp.int32(0), jnp.int32(-9))
-        q_owner0 = jnp.where(is_member_all, jnp.int32(0), jnp.int32(-1))
-        first = kops.hash_match(
-            key_hash, q_owner0, consts["psort_hash"], t_owner0, use_pallas=use_pallas
-        )
+        # -- hoisted single hash pass: find each object-member node's
+        # candidate-run start in its schema's hash-sorted property rows
+        M = consts["psort_owner"].shape[0]
+        if n_members == 1 or use_pallas:
+            # hash_match kernel over the whole table, owner = the row's
+            # member id (all zeros on a single tape): the kernel's minimal
+            # matching row within the querying document's member is its
+            # run start.  Streamed/blocked, so no giant gather -- the
+            # right trade on the kernel path.  The empty-table placeholder
+            # keeps owner -9 so all-zero key lanes cannot hit it
+            t_owner0 = jnp.where(
+                consts["psort_owner"] >= 0, consts["psort_member"], jnp.int32(-9)
+            )
+            q_owner0 = jnp.where(is_member_node, member, jnp.int32(-1))
+            first = kops.hash_match(
+                key_hash, q_owner0, consts["psort_hash"], t_owner0, use_pallas=use_pallas
+            )
+        else:
+            # linked tape on the jnp path: member-windowed pass -- each
+            # node scans only its member's psort segment (<= M-hat rows),
+            # so per-node work tracks the *largest* member instead of the
+            # member sum.  Runs never span members, so the minimal
+            # matching row in the segment is the run start, exactly as
+            # the kernel branch returns
+            seg_start = consts["member_prop_start"][member]  # (BN,)
+            seg_len = consts["member_prop_len"][member]
+            m_idx = jnp.arange(m_hat, dtype=jnp.int32)[None, :]  # (1, Mh)
+            seg_rows = jnp.clip(seg_start[:, None] + m_idx, 0, M - 1)  # (BN, Mh)
+            row_ok = (m_idx < seg_len[:, None]) & is_member_node[:, None]
+            lane_eq = jnp.all(
+                key_hash[:, None, :] == consts["psort_hash"][seg_rows], axis=-1
+            )
+            row_masked = jnp.where(lane_eq & row_ok, seg_rows, _BIG)
+            first_row = jnp.min(row_masked, axis=1)
+            first = jnp.where(first_row < _BIG, first_row, jnp.int32(-1))
         has_cand = first >= 0
         safe_first = jnp.where(has_cand, first, 0)
         run_len = jnp.where(has_cand, consts["psort_run_len"][safe_first], 0)
-        M = consts["psort_owner"].shape[0]
         k_arange = jnp.arange(k_cand, dtype=jnp.int32)[None, :]  # (1, K)
         cand_rows = jnp.clip(safe_first[:, None] + k_arange, 0, M - 1)  # (BN, K)
         cand_valid = k_arange < run_len[:, None]
@@ -190,13 +272,17 @@ def _propagate_locations(
         cand_slot = consts["psort_required_slot"][cand_rows]
         cand_orig = consts["psort_orig_row"][cand_rows]
 
+    # the required-bit contribution of every node is known the moment its
+    # own depth iteration resolves it -- accumulate elementwise in the
+    # loop and scatter ONCE afterwards instead of once per depth
+    contrib_vec = jnp.zeros(B * N, jnp.int32)
+
     for d in range(1, loop_depth + 1):
-        at_depth = (depth == d) & ~is_pad & (parent >= 0)
+        at_depth = depth == d
         parent_loc = loc[parent_flat]
-        parent_type = node_type[parent_flat]
 
         # -- object members: property-table match
-        is_member = at_depth & (parent_type == _T_OBJ)
+        is_member = at_depth & is_member_node
         if layout == "csr":
             # owner-equality over the K pre-gathered candidates; ties
             # break to the minimal original row (dense-path semantics)
@@ -220,38 +306,35 @@ def _propagate_locations(
             child_loc_m = consts["prop_child_loc"][safe_row]
             slot_m = consts["prop_required_slot"][safe_row]
         child_loc = jnp.where(matched, child_loc_m, jnp.int32(LOC_UNTRACKED))
-        # unmatched at a tracked object location: addl / closed / untracked
+        # one packed row gather for the parent's structural facts
         p_loc_safe = jnp.where(parent_loc >= 0, parent_loc, 0)
-        addl = consts["loc_addl"][p_loc_safe]
-        closed = consts["loc_closed"][p_loc_safe]
+        ls = consts["loc_struct"][p_loc_safe]  # (BN, 6)
+        addl, closed = ls[:, 0], ls[:, 1]
+        item_loc, item_start = ls[:, 2], ls[:, 3]
+        pfx_start, pfx_len = ls[:, 4], ls[:, 5]
+        # unmatched at a tracked object location: addl / closed / untracked
         unmatched_loc = jnp.where(
-            closed,
+            closed != 0,
             jnp.int32(LOC_INVALID),
             jnp.where(addl >= 0, addl, jnp.int32(LOC_UNTRACKED)),
         )
         member_loc = jnp.where(matched, child_loc, unmatched_loc)
         member_loc = jnp.where(parent_loc >= 0, member_loc, parent_loc)
 
-        # required bit scatter into the parent's acquired mask
+        # required bit: record the contribution at the node's own depth
         slot = jnp.where(matched, slot_m, -1)
         contrib = jnp.where(
             is_member & (slot >= 0),
             jnp.left_shift(jnp.int32(1), jnp.maximum(slot, 0)),
             0,
         )
-        acquired = acquired.at[parent_flat].add(
-            jnp.where(is_member, contrib, 0), mode="drop"
-        )
+        contrib_vec = jnp.where(is_member, contrib, contrib_vec)
 
         # -- array items: prefix / tail-items rules
-        is_item = at_depth & (parent_type == _T_ARR)
-        pfx_len = consts["loc_prefix_len"][p_loc_safe]
-        pfx_start = consts["loc_prefix_start"][p_loc_safe]
+        is_item = at_depth & is_item_node
         in_prefix = idx_in_parent < pfx_len
         pfx_idx = jnp.clip(pfx_start + idx_in_parent, 0, consts["prefix_loc"].shape[0] - 1)
         prefix_loc = consts["prefix_loc"][pfx_idx]
-        item_loc = consts["loc_item"][p_loc_safe]
-        item_start = consts["loc_item_start"][p_loc_safe]
         tail_loc = jnp.where(
             (item_loc >= 0) & (idx_in_parent >= item_start),
             item_loc,
@@ -260,8 +343,11 @@ def _propagate_locations(
         arr_loc = jnp.where(in_prefix, prefix_loc, tail_loc)
         arr_loc = jnp.where(parent_loc >= 0, arr_loc, parent_loc)
 
-        new_loc = jnp.where(is_member, member_loc, jnp.where(is_item, arr_loc, loc))
-        loc = jnp.where(at_depth, new_loc, loc)
+        loc = jnp.where(
+            is_member, member_loc, jnp.where(is_item, arr_loc, loc)
+        )
+
+    acquired = acquired.at[parent_flat].add(contrib_vec, mode="drop")
 
     aux = {
         "node_type": node_type,
@@ -336,6 +422,7 @@ def _assertions_csr(loc, node_cols, consts, *, use_pallas: bool, n_window: int):
 
 def _validate_batch(
     cols,
+    schema_ids,
     *,
     consts,
     max_depth: int,
@@ -344,6 +431,8 @@ def _validate_batch(
     layout: str,
     n_window: int,
     k_cand: int,
+    m_hat: int,
+    n_members: int,
 ):
     # the tape caps trackable depth at compile time: below
     # max_loc_depth + 1 every location is untracked or under an invalid
@@ -354,11 +443,14 @@ def _validate_batch(
     loop_depth = min(max_depth, tape_horizon) if layout == "csr" else max_depth
     loc, acquired, aux = _propagate_locations(
         cols,
+        schema_ids,
         consts,
         loop_depth=loop_depth,
         use_pallas=use_pallas,
         layout=layout,
         k_cand=k_cand,
+        m_hat=m_hat,
+        n_members=n_members,
     )
     node_type = aux["node_type"]
     is_pad = aux["is_pad"]
@@ -429,11 +521,16 @@ def _validate_batch(
     # location sits below the max_depth horizon -- its document's verdict
     # is vacuous, flag it undecided (the silent-correctness fix).  When the
     # tape horizon fits inside the budget, deeper nodes are provably
-    # unconstrained and every document is decided (statically).
+    # unconstrained and every document is decided (statically).  On a
+    # linked tape the global horizon is the member maximum, so documents
+    # whose *own* member horizon fits the budget are still statically
+    # decided -- keeping (valid, decided) bit-identical to dispatching
+    # each document to its own single-member tape.
     if tape_horizon <= max_depth:
         in_depth = jnp.ones(B, bool)
     else:
         is_root = jnp.arange(B * N, dtype=jnp.int32) % N == 0
         unreached = ~is_pad & ~is_root & (loc == jnp.int32(-1))
-        in_depth = ~jnp.any(unreached.reshape(B, N), axis=1)
+        member_ok = consts["member_horizons"][schema_ids] <= max_depth  # (B,)
+        in_depth = member_ok | ~jnp.any(unreached.reshape(B, N), axis=1)
     return valid, in_depth

@@ -23,6 +23,12 @@ so location propagation needs only one owner-blind hash pass; and
 ``max_loc_depth`` records the location DAG's depth so the executor can
 truncate its propagation loop at compile-time-known horizons.
 
+Multi-tenancy (DESIGN.md §8): a single-schema tape is the one-member
+degenerate case of a *linked* tape; ``registry/linker.py`` relocates
+and concatenates N member tapes so one batch can mix schemas, with
+per-document roots (``roots[schema_id]``) and per-member psort segments
+(``member_prop_start/len``, ``psort_member``).
+
 Assertion-row mini-ISA (column ``asrt_op``; operands: f0 float, i0/i1
 int32, u0/u1 uint32, plus 8 uint32 hash lanes per row):
 
@@ -176,6 +182,42 @@ class LocationTape:
     asrt_u0: np.ndarray  # uint32 (A,)
     asrt_u1: np.ndarray  # uint32 (A,)
     asrt_hash: np.ndarray  # uint32 (A, 8)
+    # -- multi-tenant linking (registry/linker.py) ----------------------
+    # A single-schema tape is the one-member degenerate case: member 0,
+    # root location 0.  A *linked* tape concatenates S relocated member
+    # tapes; ``roots[s]`` seeds each document's root location from its
+    # schema id, and the hash-sorted property view keeps per-member
+    # segments (``member_prop_start/len``; rows tagged ``psort_member``
+    # for introspection) so the executor's hash pass never matches
+    # across members (runs never span members by construction).
+    # ``member_horizons[s]`` keeps each member's own propagation horizon
+    # (max_loc_depth + 1) so per-document ``decided`` stays bit-identical
+    # to single-tape dispatch even when members disagree on depth.
+    psort_member: Optional[np.ndarray] = None  # int32 (M,)
+    roots: Optional[np.ndarray] = None  # int32 (S,)
+    member_horizons: Optional[np.ndarray] = None  # int32 (S,)
+    # per-member psort segment windows: member s's hash-sorted rows are
+    # [member_prop_start[s], member_prop_start[s] + member_prop_len[s]).
+    # ``max_member_props`` (M-hat) bounds them, so the linked executor's
+    # hash pass scans the largest member, not the member *sum*.
+    member_prop_start: Optional[np.ndarray] = None  # int32 (S,)
+    member_prop_len: Optional[np.ndarray] = None  # int32 (S,)
+    max_member_props: Optional[int] = None  # M-hat
+
+    def __post_init__(self) -> None:
+        if self.psort_member is None:
+            self.psort_member = np.zeros(len(self.psort_owner), np.int32)
+        if self.roots is None:
+            self.roots = np.zeros(1, np.int32)
+        if self.member_horizons is None:
+            self.member_horizons = np.array([self.max_loc_depth + 1], np.int32)
+        if self.member_prop_start is None:
+            self.member_prop_start = np.zeros(len(self.roots), np.int32)
+        if self.member_prop_len is None:
+            n_real = int(np.count_nonzero(self.prop_owner >= 0))
+            self.member_prop_len = np.full(len(self.roots), n_real, np.int32)
+        if self.max_member_props is None:
+            self.max_member_props = int(self.member_prop_len.max()) if len(self.member_prop_len) else 0
 
     @property
     def n_props(self) -> int:
@@ -184,6 +226,10 @@ class LocationTape:
     @property
     def n_assertions(self) -> int:
         return len(self.asrt_owner)
+
+    @property
+    def n_members(self) -> int:
+        return len(self.roots)
 
 
 class _TapeBuilder:

@@ -20,9 +20,8 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
-from ..core import CompilerOptions, Validator, compile_schema
-from ..core.batch_executor import BatchValidator
-from ..core.tape import try_build_tape
+from ..core import Validator
+from ..registry import SchemaRegistry
 from . import tokenizer
 from .doc_table import encode_batch
 
@@ -34,40 +33,112 @@ class PipelineStats:
     rejected: int = 0
     batch_validated: int = 0
     fallback_validated: int = 0
+    # batchable records the depth-budgeted executor could not decide
+    # (routed to the sequential oracle) -- observable, never silent.
+    # ``oversize`` separately counts encoder-budget (max_nodes/max_depth)
+    # overflows so the two fallback causes are distinguishable
+    undecided: int = 0
+    oversize: int = 0
 
 
 class AdmissionController:
-    """Compiled-schema admission: batch fast path + sequential fallback."""
+    """Compiled-schema admission: batch fast path + sequential fallback.
 
-    def __init__(self, schema: Any, *, use_batch: bool = True, batch_max_nodes: int = 256):
-        self.compiled = compile_schema(schema)
-        self.sequential = Validator(self.compiled, engine="codegen")
-        self.batch_validator = None
+    Single-tenant by default (one ``schema`` on the ``endpoint`` id);
+    pass a shared :class:`~repro.registry.SchemaRegistry` plus
+    per-record endpoint ids to :meth:`admit` for multi-tenant admission
+    over the registry's linked tape -- one batched launch for the whole
+    mixed stream.  ``use_pallas``/``layout``/``max_depth`` configure the
+    batched executor when the controller owns its registry (a caller-
+    provided registry keeps its own settings).
+    """
+
+    def __init__(
+        self,
+        schema: Any = None,
+        *,
+        registry: Optional[SchemaRegistry] = None,
+        endpoint: str = "default",
+        use_batch: bool = True,
+        batch_max_nodes: int = 256,
+        use_pallas: bool = False,
+        layout: str = "csr",
+        max_depth: int = 16,
+    ):
+        if registry is None:
+            registry = SchemaRegistry(
+                use_pallas=use_pallas, layout=layout, max_depth=max_depth
+            )
+        self.registry = registry
+        self.endpoint = endpoint
+        self.use_batch = use_batch
         self.batch_max_nodes = batch_max_nodes
-        if use_batch:
-            tape, reason = try_build_tape(self.compiled)
-            if tape is not None:
-                self.batch_validator = BatchValidator(tape, use_pallas=False)
-            self.fallback_reason = reason
+        if schema is not None:
+            registry.register(endpoint, schema)
+        elif endpoint not in registry.endpoints():
+            raise ValueError(
+                f"no schema given and endpoint {endpoint!r} not in the registry"
+            )
         self.stats = PipelineStats()
 
-    def admit(self, records: List[Any]) -> List[bool]:
+    # -- back-compat accessors (single-tenant view of the registry) ----------
+
+    @property
+    def _entry(self):
+        return self.registry.get(self.endpoint)
+
+    @property
+    def compiled(self):
+        return self._entry.compiled
+
+    @property
+    def sequential(self) -> Validator:
+        return self._entry.validator
+
+    @property
+    def fallback_reason(self) -> str:
+        return self._entry.stats.fallback_reason
+
+    @property
+    def batch_validator(self):
+        """The linked-tape executor, or None when the default endpoint
+        is outside the structural subset (or batching is disabled).
+
+        NOTE: on a multi-member registry the returned executor spans all
+        members -- calling ``.validate`` directly needs per-document
+        ``schema_ids`` (it refuses to guess); :meth:`admit` handles that.
+        """
+        if not self.use_batch or self._entry.tape is None:
+            return None
+        return self.registry.batch_validator()
+
+    def admit(
+        self, records: List[Any], endpoints: Optional[List[str]] = None
+    ) -> List[bool]:
+        if endpoints is None:
+            endpoints = [self.endpoint] * len(records)
         self.stats.seen += len(records)
-        results: List[Optional[bool]] = [None] * len(records)
-        if self.batch_validator is not None and records:
-            table = encode_batch(records, max_nodes=self.batch_max_nodes)
-            valid, decided = self.batch_validator.validate(table)
-            for i in range(len(records)):
-                if decided[i]:
-                    results[i] = bool(valid[i])
-                    self.stats.batch_validated += 1
-        for i, r in enumerate(results):
-            if r is None:
-                results[i] = self.sequential.is_valid(records[i])
-                self.stats.fallback_validated += 1
+        if self.use_batch:
+            results, counts = self.registry.admit_mixed(
+                records, endpoints, max_nodes=self.batch_max_nodes
+            )
+            self.stats.batch_validated += counts.batch_validated
+            self.stats.undecided += counts.undecided
+            self.stats.oversize += counts.oversize
+            self.stats.fallback_validated += counts.fallback_validated
+        else:
+            if len(endpoints) != len(records):
+                raise ValueError(
+                    f"{len(endpoints)} endpoints for {len(records)} records"
+                )
+            results = [
+                self.registry.get(e).validator.is_valid(r)
+                for e, r in zip(endpoints, records)
+            ]
+            self.stats.fallback_validated += len(records)
         self.stats.admitted += sum(results)
         self.stats.rejected += len(results) - sum(results)
-        return results  # type: ignore[return-value]
+        return results
 
 
 @dataclass

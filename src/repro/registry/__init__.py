@@ -1,0 +1,21 @@
+"""Multi-tenant schema estate: registry + tape linker.
+
+``registry.py`` owns compiled-schema versions per endpoint id;
+``linker.py`` relocates and concatenates their location tapes into one
+linked tape so a mixed-endpoint batch validates in a single batched
+kernel launch (DESIGN.md §8).
+"""
+
+from .linker import LinkedTape, TapeSegment, link_tapes, segment_tape
+from .registry import AdmitCounts, SchemaEntry, SchemaRegistry, SchemaStats
+
+__all__ = [
+    "LinkedTape",
+    "TapeSegment",
+    "link_tapes",
+    "segment_tape",
+    "AdmitCounts",
+    "SchemaEntry",
+    "SchemaRegistry",
+    "SchemaStats",
+]

@@ -1,0 +1,66 @@
+"""Shared example endpoint schemas for the multi-tenant gateway.
+
+One copy serves both the demo (``examples/api_gateway.py``) and the
+mixed-traffic benchmark (``benchmarks/registry.py``) so the benchmark
+always measures exactly the schemas the demo serves.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+__all__ = ["GATEWAY_SCHEMAS"]
+
+GATEWAY_SCHEMAS: Dict[str, Any] = {
+    "complete": {
+        "type": "object",
+        "required": ["prompt"],
+        "additionalProperties": False,
+        "properties": {
+            "prompt": {"type": "string", "minLength": 1, "maxLength": 65536},
+            "max_tokens": {"type": "integer", "minimum": 1, "maximum": 4096},
+            "temperature": {"type": "number", "minimum": 0, "maximum": 2},
+            "stop": {"type": "array", "items": {"type": "string"}, "maxItems": 4},
+        },
+    },
+    "chat": {
+        "type": "object",
+        "required": ["messages"],
+        "additionalProperties": False,
+        "properties": {
+            "messages": {
+                "type": "array",
+                "minItems": 1,
+                "maxItems": 16,
+                "items": {
+                    "type": "object",
+                    "required": ["role", "content"],
+                    "additionalProperties": False,
+                    "properties": {
+                        "role": {"enum": ["system", "user", "assistant"]},
+                        "content": {"type": "string", "minLength": 1},
+                    },
+                },
+            },
+            "max_tokens": {"type": "integer", "minimum": 1, "maximum": 4096},
+        },
+    },
+    "embed": {
+        "type": "object",
+        "required": ["input"],
+        "additionalProperties": False,
+        "properties": {
+            "input": {"type": "string", "minLength": 1, "maxLength": 8192},
+            "dimensions": {"type": "integer", "minimum": 8, "maximum": 4096},
+        },
+    },
+    "moderate": {
+        "type": "object",
+        "required": ["input", "category"],
+        "additionalProperties": False,
+        "properties": {
+            "input": {"type": "string", "minLength": 1},
+            "category": {"enum": ["toxicity", "violence", "spam"]},
+        },
+    },
+}

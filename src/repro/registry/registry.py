@@ -1,0 +1,370 @@
+"""Schema registry: compile-once, multi-tenant validation state.
+
+The paper's deployment premise is that schemas change rarely while
+traffic is huge, so compilation cost amortizes to zero (PAPER.md §1).  A
+gateway hosts *many* endpoint schemas and versions; the registry owns
+that estate:
+
+- :meth:`SchemaRegistry.register` compiles a schema for an endpoint id,
+  caching the ``(CompiledSchema, Validator, LocationTape)`` triple plus
+  compile-time stats (:class:`SchemaStats`).  Repeated registration on
+  one endpoint creates monotonically increasing *versions*; the latest
+  version serves.
+- the **linked tape** over all batchable active versions is built by
+  ``registry/linker.py``, eagerly at registration/eviction time so the
+  serving path never re-links, and *incrementally*: per-version
+  :class:`~repro.registry.linker.TapeSegment` preparations are cached,
+  so a hot-swap re-links N members as pure concatenation with N-1
+  segments coming from cache.  The linked state is keyed by the tuple
+  of batchable (endpoint, serving-version) members: no-op changes
+  (re-registering an identical schema, evicting a non-serving version,
+  touching sequential-only endpoints) keep the jitted serving validator
+  alive.
+- :meth:`validate_mixed` validates a heterogeneous batch (per-document
+  endpoint ids) in **one** batched-executor launch over the linked
+  tape; documents of unbatchable endpoints (or undecided rows) are
+  reported ``decided=False`` for the caller to route to that endpoint's
+  sequential validator (per-schema modern-spec semantics stay pinned to
+  the sequential oracle).
+"""
+
+from __future__ import annotations
+
+import copy
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import CompiledSchema, Validator, compile_schema
+from ..core.batch_executor import BatchValidator
+from ..core.tape import LocationTape, try_build_tape
+from .linker import LinkedTape, TapeSegment, link_tapes, segment_tape
+
+__all__ = ["SchemaStats", "SchemaEntry", "SchemaRegistry", "AdmitCounts"]
+
+
+@dataclass
+class AdmitCounts:
+    """How a mixed stream's verdicts were produced (admit_mixed)."""
+
+    batch_validated: int = 0  # decided by the linked-tape launch
+    undecided: int = 0  # batchable but past the depth budget -> fallback
+    oversize: int = 0  # batchable but past the encoder node budget -> fallback
+    fallback_validated: int = 0  # sequential verdicts (incl. undecided/oversize)
+
+
+@dataclass
+class SchemaStats:
+    """Compile-time facts recorded at registration (the amortized cost)."""
+
+    compile_seconds: float
+    tape_seconds: float
+    instruction_count: int
+    batchable: bool
+    fallback_reason: str = ""
+    n_locations: int = 0
+    n_props: int = 0
+    n_assertions: int = 0
+    a_hat: int = 0
+    k: int = 0
+    horizon: int = 0
+
+
+@dataclass
+class SchemaEntry:
+    """One registered (endpoint, version) with its compiled artifacts."""
+
+    endpoint: str
+    version: int
+    schema: Any
+    compiled: CompiledSchema
+    validator: Validator  # sequential oracle (modern-spec semantics)
+    tape: Optional[LocationTape]  # None outside the structural subset
+    stats: SchemaStats
+
+
+class SchemaRegistry:
+    """Register/version/evict compiled schemas; link them for batching."""
+
+    def __init__(
+        self,
+        *,
+        engine: str = "codegen",
+        use_pallas: bool = False,
+        layout: str = "csr",
+        max_depth: int = 16,
+    ):
+        self.engine = engine
+        self.use_pallas = use_pallas
+        self.layout = layout
+        self.max_depth = max_depth
+        self._entries: Dict[str, Dict[int, SchemaEntry]] = {}
+        self._active: Dict[str, int] = {}  # endpoint -> serving version
+        self._order: List[str] = []  # registration order = member order
+        # version numbers are monotonic per endpoint FOREVER (they survive
+        # full eviction): the linked-state signature relies on
+        # (endpoint, version) pairs never being reused
+        self._next_version: Dict[str, int] = {}
+        self._segments: Dict[Tuple[str, int], TapeSegment] = {}
+        self._generation = 0
+        # lazily (re)built linked state, keyed by the tuple of batchable
+        # (endpoint, serving-version) members so no-op generation bumps
+        # (evicting a non-serving version, registering a sequential-only
+        # schema) never discard the jitted serving validator
+        self._linked_generation = -1
+        self._linked_signature: Optional[Tuple[Tuple[str, int], ...]] = None
+        self._linked: Optional[LinkedTape] = None
+        self._linked_validator: Optional[BatchValidator] = None
+        self._member_index: Dict[str, int] = {}
+
+    # -- registration ---------------------------------------------------------
+
+    def register(self, endpoint: str, schema: Any) -> SchemaEntry:
+        """Compile + cache ``schema`` as the next version of ``endpoint``.
+
+        All control-plane cost lands here, at registration time: schema
+        compilation AND the linked-tape re-cut (pure numpy concatenation
+        over cached per-version segments).  The serving path never
+        re-links; the only residual first-call cost there is the jit
+        trace per new batch shape, which any executor (single-tape
+        included) pays.  Re-registering the currently-serving schema
+        verbatim is a no-op returning the existing entry (no version
+        bump, no re-link, no jit discard).
+        """
+        if endpoint in self._active:
+            current = self.get(endpoint)
+            if current.schema == schema:
+                return current
+        # snapshot: entries own their schema by value, so callers mutating
+        # the dict they registered cannot corrupt (or no-op-skip) later
+        # registrations against the served version
+        schema = copy.deepcopy(schema)
+        t0 = time.perf_counter()
+        compiled = compile_schema(schema)
+        validator = Validator(compiled, engine=self.engine)
+        t_compile = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        tape, reason = try_build_tape(compiled)
+        t_tape = time.perf_counter() - t0
+        stats = SchemaStats(
+            compile_seconds=t_compile,
+            tape_seconds=t_tape,
+            instruction_count=compiled.instruction_count(),
+            batchable=tape is not None,
+            fallback_reason=reason,
+        )
+        if tape is not None:
+            stats.n_locations = tape.n_locations
+            stats.n_props = tape.n_props
+            stats.n_assertions = tape.n_assertions
+            stats.a_hat = tape.max_rows_per_loc
+            stats.k = tape.max_hash_run
+            stats.horizon = tape.max_loc_depth + 1
+        versions = self._entries.setdefault(endpoint, {})
+        version = self._next_version.get(endpoint, 0) + 1
+        self._next_version[endpoint] = version
+        entry = SchemaEntry(
+            endpoint=endpoint,
+            version=version,
+            schema=schema,
+            compiled=compiled,
+            validator=validator,
+            tape=tape,
+            stats=stats,
+        )
+        versions[version] = entry
+        self._active[endpoint] = version
+        if endpoint not in self._order:
+            self._order.append(endpoint)
+        self._generation += 1
+        self._relink()  # eager: keep re-link cost off the serving path
+        return entry
+
+    def get(self, endpoint: str, version: Optional[int] = None) -> SchemaEntry:
+        """The serving (or a pinned historical) entry for ``endpoint``."""
+        if endpoint not in self._active:
+            raise KeyError(f"endpoint {endpoint!r} not registered")
+        v = self._active[endpoint] if version is None else version
+        try:
+            return self._entries[endpoint][v]
+        except KeyError:
+            raise KeyError(f"endpoint {endpoint!r} has no version {v}") from None
+
+    def evict(self, endpoint: str, version: Optional[int] = None) -> None:
+        """Drop one version (or the whole endpoint when ``version=None``).
+
+        Evicting the serving version rolls the endpoint back to its
+        newest remaining version.
+        """
+        if endpoint not in self._entries:
+            raise KeyError(f"endpoint {endpoint!r} not registered")
+        versions = self._entries[endpoint]
+        doomed = list(versions) if version is None else [version]
+        for v in doomed:
+            if v not in versions:
+                raise KeyError(f"endpoint {endpoint!r} has no version {v}")
+            del versions[v]
+            self._segments.pop((endpoint, v), None)
+        if versions:
+            if self._active[endpoint] not in versions:
+                self._active[endpoint] = max(versions)
+        else:
+            del self._entries[endpoint]
+            del self._active[endpoint]
+            self._order.remove(endpoint)
+        self._generation += 1
+        self._relink()  # eager, and a no-op unless membership changed
+
+    def endpoints(self) -> List[str]:
+        return list(self._order)
+
+    def __contains__(self, endpoint: str) -> bool:
+        """O(1) membership test (request-critical path friendly)."""
+        return endpoint in self._active
+
+    def versions(self, endpoint: str) -> List[int]:
+        return sorted(self._entries.get(endpoint, ()))
+
+    @property
+    def generation(self) -> int:
+        return self._generation
+
+    # -- linked-tape state ----------------------------------------------------
+
+    def _relink(self) -> None:
+        """Re-cut the linked tape from cached per-version segments."""
+        members: List[str] = []
+        segments: List[TapeSegment] = []
+        for endpoint in self._order:
+            entry = self.get(endpoint)
+            if entry.tape is None:
+                continue
+            key = (endpoint, entry.version)
+            seg = self._segments.get(key)
+            if seg is None:
+                seg = self._segments[key] = segment_tape(entry.tape)
+            members.append(endpoint)
+            segments.append(seg)
+        signature = tuple(
+            (m, self._active[m]) for m in members
+        )
+        if signature == self._linked_signature:
+            # membership unchanged: keep the jitted validator alive
+            self._linked_generation = self._generation
+            return
+        if members:
+            self._linked = link_tapes(segments=segments, names=members)
+            self._linked_validator = BatchValidator(
+                self._linked,
+                max_depth=self.max_depth,
+                use_pallas=self.use_pallas,
+                layout=self.layout,
+            )
+        else:
+            self._linked = None
+            self._linked_validator = None
+        self._member_index = {m: i for i, m in enumerate(members)}
+        self._linked_signature = signature
+        self._linked_generation = self._generation
+
+    def linked_tape(self) -> Optional[LinkedTape]:
+        """The linked tape over all batchable serving versions (or None)."""
+        if self._linked_generation != self._generation:
+            self._relink()
+        return self._linked
+
+    def batch_validator(self) -> Optional[BatchValidator]:
+        """Batched executor over the current linked tape (or None)."""
+        if self._linked_generation != self._generation:
+            self._relink()
+        return self._linked_validator
+
+    def schema_ids(self, endpoints: Sequence[str]) -> np.ndarray:
+        """Member indices into the linked tape; -1 = sequential-only."""
+        if self._linked_generation != self._generation:
+            self._relink()
+        return np.array(
+            [self._member_index.get(e, -1) for e in endpoints], np.int32
+        )
+
+    # -- multi-tenant validation ---------------------------------------------
+
+    def validate_mixed(
+        self,
+        table,
+        endpoints: Sequence[str],
+        *,
+        schema_ids: Optional[np.ndarray] = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """One batched launch over a heterogeneous (mixed-schema) batch.
+
+        ``table`` is an encoded :class:`~repro.data.doc_table.TokenTable`
+        whose row b belongs to ``endpoints[b]``.  Returns ``(valid,
+        decided)``; rows of unbatchable endpoints come back
+        ``decided=False`` and must be routed to that endpoint's
+        sequential validator (``self.get(endpoint).validator``).
+        """
+        B = table.batch
+        if len(endpoints) != B:
+            raise ValueError(f"{len(endpoints)} endpoints for batch of {B}")
+        for e in set(endpoints):
+            self.get(e)  # raises KeyError on unknown endpoints
+        bv = self.batch_validator()
+        if bv is None:
+            return np.zeros(B, bool), np.zeros(B, bool)
+        ids = self.schema_ids(endpoints) if schema_ids is None else schema_ids
+        batchable = ids >= 0
+        valid, decided = bv.validate(table, np.where(batchable, ids, 0))
+        return valid, decided & batchable
+
+    def admit_mixed(
+        self, docs: Sequence[Any], endpoints: Sequence[str], *, max_nodes: int = 256
+    ) -> Tuple[List[bool], "AdmitCounts"]:
+        """Full mixed-stream admission: one linked launch + routed fallback.
+
+        Encodes ONLY the rows whose endpoint is a linked-tape member (no
+        wasted encode/launch work on sequential-only traffic), validates
+        them in one batched call, and routes everything else -- rows of
+        unbatchable endpoints and undecided rows -- to that endpoint's
+        sequential validator.  Returns per-row verdicts plus counters;
+        both the serving engine and the pipeline admission controller
+        share this path.
+        """
+        if len(endpoints) != len(docs):
+            raise ValueError(f"{len(endpoints)} endpoints for {len(docs)} docs")
+        for e in set(endpoints):
+            self.get(e)
+        verdicts: List[Optional[bool]] = [None] * len(docs)
+        counts = AdmitCounts()
+        ids = self.schema_ids(endpoints)
+        fast = [i for i in range(len(docs)) if ids[i] >= 0]
+        if fast:
+            from ..data.doc_table import encode_batch
+
+            # pad the batch dimension to a power-of-two bucket: the
+            # executor re-traces per batch shape, and len(fast) is
+            # traffic-controlled -- bucketing caps compilations at
+            # log2(max burst) instead of one per distinct size
+            bucket = 1 << (len(fast) - 1).bit_length() if len(fast) > 1 else 1
+            pad = bucket - len(fast)
+            table = encode_batch(
+                [docs[i] for i in fast] + [None] * pad, max_nodes=max_nodes
+            )
+            pad_ids = np.concatenate([ids[fast], np.zeros(pad, np.int32)])
+            bv = self.batch_validator()
+            valid, decided = bv.validate(table, pad_ids.astype(np.int32))
+            for j, i in enumerate(fast):
+                if decided[j]:
+                    verdicts[i] = bool(valid[j])
+                    counts.batch_validated += 1
+                elif not table.ok[j]:
+                    counts.oversize += 1  # encoder node/depth budget
+                else:
+                    counts.undecided += 1  # executor depth budget
+        for i, v in enumerate(verdicts):
+            if v is None:
+                verdicts[i] = self.get(endpoints[i]).validator.is_valid(docs[i])
+                counts.fallback_validated += 1
+        return verdicts, counts  # type: ignore[return-value]

@@ -2,11 +2,19 @@
 
 The paper's motivating deployment is an API gateway validating every
 request before the expensive work.  Here the expensive work is LM
-inference: ``submit`` validates the JSON request against the request
+inference: ``submit`` validates the JSON request against its endpoint's
 schema (compiled Blaze validator -- the latency-critical path the paper
 measures), tokenizes the prompt, and assigns a batch slot; ``step``
 prefills newly admitted requests and decodes one token for every active
 slot.  Slot bookkeeping is a miniature continuous-batching scheduler.
+
+Multi-tenant routing: the engine owns a
+:class:`~repro.registry.SchemaRegistry` of per-endpoint request schemas
+(endpoint ``"default"`` always exists).  ``submit`` validates one
+request sequentially; ``submit_batch`` admits a mixed-endpoint burst in
+a single batched launch over the registry's linked tape, falling back
+to each endpoint's sequential validator only for undecided rows and
+endpoints outside the structural subset.
 """
 
 from __future__ import annotations
@@ -14,16 +22,16 @@ from __future__ import annotations
 import json
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import Validator, compile_schema
 from ..data import tokenizer
 from ..models.config import ArchConfig
 from ..models.model import Model
+from ..registry import SchemaRegistry
 
 REQUEST_SCHEMA: Dict[str, Any] = {
     "$schema": "https://json-schema.org/draft/2020-12/schema",
@@ -52,6 +60,7 @@ class ServeConfig:
     max_len: int = 512
     default_max_tokens: int = 32
     greedy: bool = True
+    admission_max_nodes: int = 128  # token-table budget for submit_batch
 
 
 @dataclass
@@ -72,6 +81,14 @@ class ServeStats:
     completed: int = 0
     validation_seconds: float = 0.0
     decode_steps: int = 0
+    batch_validated: int = 0  # verdicts from the linked-tape launch
+    fallback_validated: int = 0  # sequential (unbatchable or undecided)
+    validated_only: int = 0  # admitted without a decodable text field
+    by_endpoint: Dict[str, Dict[str, int]] = field(default_factory=dict)
+
+    def count(self, endpoint: str, key: str) -> None:
+        per = self.by_endpoint.setdefault(endpoint, {"admitted": 0, "rejected": 0})
+        per[key] += 1
 
 
 class ServeEngine:
@@ -81,16 +98,22 @@ class ServeEngine:
         params: Any,
         serve_cfg: ServeConfig = ServeConfig(),
         request_schema: Optional[Dict[str, Any]] = None,
+        endpoint_schemas: Optional[Dict[str, Any]] = None,
+        registry: Optional[SchemaRegistry] = None,
     ):
         self.cfg = cfg
         self.model = Model(cfg)
         self.params = params
         self.scfg = serve_cfg
-        # compiled ONCE; validated per request -- the paper's AOT bet
-        # (codegen engine: the fastest path on the request-critical path)
-        self.validator = Validator(
-            compile_schema(request_schema or REQUEST_SCHEMA), engine="codegen"
-        )
+        # compiled ONCE per endpoint; validated per request -- the paper's
+        # AOT bet (codegen engine on the request-critical path).  The
+        # registry also links all batchable endpoint tapes for
+        # submit_batch's single-launch mixed admission.
+        self.registry = registry if registry is not None else SchemaRegistry()
+        if request_schema is not None or "default" not in self.registry:
+            self.registry.register("default", request_schema or REQUEST_SCHEMA)
+        for name, schema in (endpoint_schemas or {}).items():
+            self.registry.register(name, schema)
         self.stats = ServeStats()
         self.slots: List[Optional[_Slot]] = [None] * serve_cfg.batch_slots
         self.queue: List[_Slot] = []
@@ -101,29 +124,111 @@ class ServeEngine:
 
     # -- admission ------------------------------------------------------------
 
-    def submit(self, request_json: str) -> Tuple[Optional[int], str]:
-        """Validate + enqueue a request.  Returns (request_id, error)."""
+    @property
+    def validator(self):
+        """The default endpoint's serving validator (hot-swap aware)."""
+        return self.registry.get("default").validator
+
+    def submit(
+        self, request_json: str, endpoint: str = "default"
+    ) -> Tuple[Optional[int], str]:
+        """Validate + enqueue one request.  Returns (request_id, error)."""
         self.stats.received += 1
+        request, err = self._parse(request_json, endpoint)
+        if err:
+            return None, err
+        entry = self.registry.get(endpoint)
+        t0 = time.perf_counter()
+        ok = entry.validator.is_valid(request)
+        self.stats.validation_seconds += time.perf_counter() - t0
+        self.stats.fallback_validated += 1
+        if not ok:
+            self.stats.rejected += 1
+            self.stats.count(endpoint, "rejected")
+            return None, "schema validation failed"
+        return self._enqueue(request, endpoint), ""
+
+    def submit_batch(
+        self, requests: Sequence[Tuple[str, str]]
+    ) -> List[Tuple[Optional[int], str]]:
+        """Admit a mixed-endpoint burst of (endpoint, request_json) pairs.
+
+        All parseable requests are validated in ONE batched launch over
+        the registry's linked tape; only undecided rows and endpoints
+        outside the structural subset take the sequential fallback.
+        Returns a (request_id, error) pair per input, in order.
+        """
+        out: List[Optional[Tuple[Optional[int], str]]] = [None] * len(requests)
+        parsed: List[Tuple[int, str, Any]] = []
+        for i, (endpoint, request_json) in enumerate(requests):
+            self.stats.received += 1
+            request, err = self._parse(request_json, endpoint)
+            if err:
+                out[i] = (None, err)
+            else:
+                parsed.append((i, endpoint, request))
+        if parsed:
+            docs = [r for _, _, r in parsed]
+            endpoints = [e for _, e, _ in parsed]
+            t0 = time.perf_counter()
+            verdicts, counts = self.registry.admit_mixed(
+                docs, endpoints, max_nodes=self.scfg.admission_max_nodes
+            )
+            self.stats.batch_validated += counts.batch_validated
+            self.stats.fallback_validated += counts.fallback_validated
+            self.stats.validation_seconds += time.perf_counter() - t0
+            for (i, endpoint, request), ok in zip(parsed, verdicts):
+                if ok:
+                    out[i] = (self._enqueue(request, endpoint), "")
+                else:
+                    self.stats.rejected += 1
+                    self.stats.count(endpoint, "rejected")
+                    out[i] = (None, "schema validation failed")
+        return out  # type: ignore[return-value]
+
+    def _parse(self, request_json: str, endpoint: str):
+        # endpoint membership first: by_endpoint buckets exist only for
+        # registered endpoints (unknown names are client-controlled and
+        # must not grow the stats dict without bound)
+        if endpoint not in self.registry:
+            self.stats.rejected += 1
+            return None, f"unknown endpoint {endpoint!r}"
         try:
             request = json.loads(request_json)
         except json.JSONDecodeError as exc:
             self.stats.rejected += 1
+            self.stats.count(endpoint, "rejected")
             return None, f"malformed JSON: {exc}"
-        t0 = time.perf_counter()
-        ok = self.validator.is_valid(request)
-        self.stats.validation_seconds += time.perf_counter() - t0
-        if not ok:
-            self.stats.rejected += 1
-            return None, "schema validation failed"
-        slot = _Slot(
-            request_id=self._next_id,
-            tokens=tokenizer.encode(request["prompt"], eos=False),
-            max_tokens=request.get("max_tokens", self.scfg.default_max_tokens),
-        )
+        return request, ""
+
+    def _enqueue(self, request: Any, endpoint: str) -> int:
+        rid = self._next_id
         self._next_id += 1
-        self.queue.append(slot)
         self.stats.admitted += 1
-        return slot.request_id, ""
+        self.stats.count(endpoint, "admitted")
+        prompt = _extract_prompt(request)
+        if prompt is None:
+            # validation-only request (no decodable text field): ack
+            # immediately, and count it so silently-dropped decodes are
+            # observable rather than indistinguishable from completions
+            self.results[rid] = ""
+            self.stats.completed += 1
+            self.stats.validated_only += 1
+            return rid
+        # endpoint schemas are tenant-supplied: an open schema may admit a
+        # non-integer or absurd max_tokens, which must not poison the
+        # shared decode loop -- sanitize and clamp to the slot budget
+        max_tokens = request.get("max_tokens", self.scfg.default_max_tokens)
+        if isinstance(max_tokens, bool) or not isinstance(max_tokens, int):
+            max_tokens = self.scfg.default_max_tokens
+        max_tokens = max(1, min(max_tokens, self.scfg.max_len))
+        slot = _Slot(
+            request_id=rid,
+            tokens=tokenizer.encode(prompt, eos=False),
+            max_tokens=max_tokens,
+        )
+        self.queue.append(slot)
+        return rid
 
     # -- execution ------------------------------------------------------------
 
@@ -176,6 +281,25 @@ class ServeEngine:
             self.step()
             steps += 1
         return dict(self.results)
+
+
+def _extract_prompt(request: Any) -> Optional[str]:
+    """Decode text for a request: prompt / input / chat messages."""
+    if isinstance(request, dict):
+        for key in ("prompt", "input"):
+            value = request.get(key)
+            if isinstance(value, str):
+                return value
+        messages = request.get("messages")
+        if isinstance(messages, list):
+            parts = [
+                m["content"]
+                for m in messages
+                if isinstance(m, dict) and isinstance(m.get("content"), str)
+            ]
+            if parts:
+                return "\n".join(parts)
+    return None
 
 
 def _write_slot_cache(batch_cache, slot_cache, slot_idx: int):

@@ -129,3 +129,62 @@ class TestServeEngine:
             assert rid in results
         assert engine.stats.completed >= 3
         assert engine.stats.validation_seconds < 1.0  # admission is cheap
+
+
+class TestMultiEndpointServe:
+    @pytest.fixture(scope="class")
+    def engine(self):
+        cfg = get_config("granite-3-8b").reduced()
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        return ServeEngine(cfg, params, ServeConfig(batch_slots=2, max_len=64,
+                                                    default_max_tokens=4))
+
+    def test_multi_endpoint_submit_batch(self, engine):
+        # hosted alongside "default": two more endpoints through the
+        # registry; mixed burst admits via the linked tape in one launch
+        engine.registry.register("echo", {
+            "type": "object", "required": ["input"], "additionalProperties": False,
+            "properties": {"input": {"type": "string", "minLength": 1}},
+        })
+        engine.registry.register("score", {
+            "type": "object", "required": ["value"],
+            "properties": {"value": {"type": "number", "minimum": 0, "maximum": 1}},
+        })
+        before = engine.stats.batch_validated
+        results = engine.submit_batch([
+            ("echo", json.dumps({"input": "hello"})),
+            ("score", json.dumps({"value": 0.5})),
+            ("score", json.dumps({"value": 2.0})),     # invalid: maximum
+            ("echo", json.dumps({"input": ""})),       # invalid: minLength
+            ("default", json.dumps({"prompt": "hi", "max_tokens": 2})),
+            ("nope", json.dumps({})),                  # unknown endpoint
+            ("echo", "{not json"),
+        ])
+        assert [rid is not None for rid, _ in results] == [
+            True, True, False, False, True, False, False]
+        assert "unknown endpoint" in results[5][1]
+        assert "malformed" in results[6][1]
+        # echo/score rows validated on the linked tape; "default" uses
+        # propertyNames (sequential-only member)
+        assert engine.stats.batch_validated - before >= 4
+        engine.run_until_drained(max_steps=64)
+
+    def test_per_endpoint_stats_and_submit_routing(self, engine):
+        # self-contained: registers its own endpoint and asserts deltas
+        engine.registry.register("stats-ep", {
+            "type": "object", "required": ["input"],
+            "properties": {"input": {"type": "string"}},
+        })
+        before = dict(engine.stats.by_endpoint.get("stats-ep",
+                                                   {"admitted": 0, "rejected": 0}))
+        rid, err = engine.submit(
+            json.dumps({"input": "one more"}), endpoint="stats-ep"
+        )
+        assert rid is not None, err
+        rid, _ = engine.submit(json.dumps({"input": 5}), endpoint="stats-ep")
+        assert rid is None
+        per = engine.stats.by_endpoint["stats-ep"]
+        assert per["admitted"] - before["admitted"] == 1
+        assert per["rejected"] - before["rejected"] == 1
+        engine.run_until_drained(max_steps=64)
