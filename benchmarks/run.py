@@ -6,6 +6,7 @@ One module per paper table/figure:
   ablations    -- Figure 7 (per-optimization contribution)
   batched      -- beyond-paper TPU-form executor + coverage
   registry     -- beyond-paper multi-tenant mixed traffic (linked tape)
+  recursive    -- beyond-paper recursive-$ref unrolling (frontier routing)
   roofline     -- §Roofline terms from the dry-run artifacts
 
 Prints ``name,us_per_call,derived`` CSV lines and writes the full report
@@ -26,7 +27,15 @@ RESULTS = Path(__file__).resolve().parents[1] / "results"
 
 
 def main() -> None:
-    from . import ablations, batched, compile_time, registry, roofline, validation
+    from . import (
+        ablations,
+        batched,
+        compile_time,
+        recursive,
+        registry,
+        roofline,
+        validation,
+    )
 
     modules = [
         ("validation", validation),
@@ -34,6 +43,7 @@ def main() -> None:
         ("ablations", ablations),
         ("batched", batched),
         ("registry", registry),
+        ("recursive", recursive),
         ("roofline", roofline),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None

@@ -1,7 +1,12 @@
 #!/usr/bin/env bash
 # Tier-1 verify: the exact command the roadmap pins (ROADMAP.md).
 # Usage: scripts/tier1.sh [extra pytest args]
+#
+# The suite runs >5 min; --durations surfaces the hot spots so slow
+# creep is visible per run.  The subprocess-spawning distributed tests
+# are marked `slow` -- `scripts/tier1.sh -m "not slow"` is the quick
+# local loop (CI always runs everything).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+exec python -m pytest -x -q --durations=15 "$@"

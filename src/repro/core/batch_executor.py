@@ -32,7 +32,10 @@ bit-identically to per-schema dispatch (DESIGN.md §8).  The pipeline:
    ``decided`` flag: nodes deeper than the ``max_depth`` budget never
    receive a location, so their documents are flagged undecided and must
    be routed to the sequential executor (mirroring the encoder budget in
-   ``TokenTable.ok``) instead of vacuously passing.
+   ``TokenTable.ok``) instead of vacuously passing.  Documents whose
+   recursion outran the tape's $ref-unroll budget carry ``LOC_FRONTIER``
+   nodes and are likewise undecided (``validate_ex`` exposes the flag so
+   callers can count those ``unroll_overflow`` fallbacks separately).
 
 ``layout="dense"`` keeps the historical full-matrix path (hash_match per
 depth iteration + dense assertion matrix) for apples-to-apples
@@ -55,7 +58,7 @@ import numpy as np
 
 from ..kernels import ops as kops
 from .nodetypes import T_ARR as _T_ARR, T_OBJ as _T_OBJ
-from .tape import LOC_INVALID, LOC_UNTRACKED, LocationTape
+from .tape import LOC_FRONTIER, LOC_INVALID, LOC_UNTRACKED, LocationTape
 
 __all__ = ["BatchValidator"]
 
@@ -102,7 +105,13 @@ def _tape_consts(tape: LocationTape) -> Dict[str, jnp.ndarray]:
         "asrt_u1": jnp.asarray(tape.asrt_u1),
         "asrt_hash": jnp.asarray(tape.asrt_hash),
         "psort_member": jnp.asarray(tape.psort_member),
-        "roots": jnp.asarray(tape.roots),
+        # a frontier root (degenerate: the unroll budget died at the
+        # root) must seed documents with the sentinel, not location 0
+        "roots": jnp.asarray(
+            np.where(tape.loc_frontier[tape.roots], LOC_FRONTIER, tape.roots).astype(
+                np.int32
+            )
+        ),
         "member_horizons": jnp.asarray(tape.member_horizons),
         "member_prop_start": jnp.asarray(tape.member_prop_start),
         "member_prop_len": jnp.asarray(tape.member_prop_len),
@@ -130,6 +139,8 @@ class BatchValidator:
         self.n_window = max(1, tape.max_rows_per_loc)
         self.k_cand = max(1, tape.max_hash_run)
         self.m_hat = max(1, tape.max_member_props)
+        # static: tapes without frontier locations skip the detection scan
+        self.has_frontier = tape.n_frontier > 0
         self._consts = _tape_consts(tape)
         self._fn = jax.jit(
             functools.partial(
@@ -143,6 +154,7 @@ class BatchValidator:
                 k_cand=self.k_cand,
                 m_hat=self.m_hat,
                 n_members=tape.n_members,
+                has_frontier=self.has_frontier,
             )
         )
 
@@ -154,10 +166,25 @@ class BatchValidator:
         ``tape.roots[schema_ids[b]]``.  Single-member tapes (the default)
         accept the implicit all-zeros vector.
 
-        ``decided=False`` rows exceeded the encoder budget *or* contain
+        ``decided=False`` rows exceeded the encoder budget, contain
         nodes deeper than this validator's ``max_depth`` (which the
-        location loop never reaches); both must be routed to the
-        sequential executor -- their ``valid`` entry is meaningless.
+        location loop never reaches), *or* reached a ``LOC_FRONTIER``
+        sentinel (the tape's $ref-unroll budget ran out below them); all
+        must be routed to the sequential executor -- their ``valid``
+        entry is meaningless.
+        """
+        valid, decided, _ = self.validate_ex(table, schema_ids)
+        return valid, decided
+
+    def validate_ex(
+        self, table, schema_ids=None
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Like :meth:`validate` plus the per-doc ``frontier`` flag.
+
+        ``frontier[b]`` is True when document b reached an unroll
+        frontier -- one of the three undecided causes (the others being
+        encoder oversize and the depth budget), kept separate so callers
+        can count ``unroll_overflow`` fallbacks distinctly.
         """
         B = table.batch
         if schema_ids is None:
@@ -174,8 +201,10 @@ class BatchValidator:
             if ids.size and (ids.min() < 0 or ids.max() >= self.tape.n_members):
                 raise ValueError("schema_ids outside the tape's member range")
         cols = {k: jnp.asarray(v) for k, v in table.columns().items()}
-        valid, in_depth = self._fn(cols, jnp.asarray(ids))
-        return np.asarray(valid), np.asarray(in_depth) & np.asarray(table.ok)
+        valid, in_depth, frontier = self._fn(cols, jnp.asarray(ids))
+        frontier = np.asarray(frontier)
+        decided = np.asarray(in_depth) & ~frontier & np.asarray(table.ok)
+        return np.asarray(valid), decided, frontier & np.asarray(table.ok)
 
 
 def _propagate_locations(
@@ -313,10 +342,16 @@ def _propagate_locations(
         item_loc, item_start = ls[:, 2], ls[:, 3]
         pfx_start, pfx_len = ls[:, 4], ls[:, 5]
         # unmatched at a tracked object location: addl / closed / untracked
+        # (an addl slot may carry the LOC_FRONTIER sentinel: recursion
+        # through additionalProperties past the unroll budget)
         unmatched_loc = jnp.where(
             closed != 0,
             jnp.int32(LOC_INVALID),
-            jnp.where(addl >= 0, addl, jnp.int32(LOC_UNTRACKED)),
+            jnp.where(
+                (addl >= 0) | (addl == LOC_FRONTIER),
+                addl,
+                jnp.int32(LOC_UNTRACKED),
+            ),
         )
         member_loc = jnp.where(matched, child_loc, unmatched_loc)
         member_loc = jnp.where(parent_loc >= 0, member_loc, parent_loc)
@@ -336,7 +371,8 @@ def _propagate_locations(
         pfx_idx = jnp.clip(pfx_start + idx_in_parent, 0, consts["prefix_loc"].shape[0] - 1)
         prefix_loc = consts["prefix_loc"][pfx_idx]
         tail_loc = jnp.where(
-            (item_loc >= 0) & (idx_in_parent >= item_start),
+            ((item_loc >= 0) | (item_loc == LOC_FRONTIER))
+            & (idx_in_parent >= item_start),
             item_loc,
             jnp.int32(LOC_UNTRACKED),
         )
@@ -433,6 +469,7 @@ def _validate_batch(
     k_cand: int,
     m_hat: int,
     n_members: int,
+    has_frontier: bool = False,
 ):
     # the tape caps trackable depth at compile time: below
     # max_loc_depth + 1 every location is untracked or under an invalid
@@ -533,4 +570,17 @@ def _validate_batch(
         unreached = ~is_pad & ~is_root & (loc == jnp.int32(-1))
         member_ok = consts["member_horizons"][schema_ids] <= max_depth  # (B,)
         in_depth = member_ok | ~jnp.any(unreached.reshape(B, N), axis=1)
-    return valid, in_depth
+
+    # $ref-unroll frontiers (DESIGN.md §9): transition edges past the
+    # unroll budget carry LOC_FRONTIER, and the ordinary negative-parent
+    # propagation spreads it down the subtree -- so one equality scan
+    # finds every document whose recursion outran the tape.  Those
+    # verdicts are vacuous: the caller must route them to the sequential
+    # oracle (counted as ``unroll_overflow``, distinct from the depth
+    # budget's ``undecided``).  Statically skipped for frontier-free
+    # tapes (the overwhelming majority).
+    if has_frontier:
+        frontier = jnp.any((loc == jnp.int32(LOC_FRONTIER)).reshape(B, N), axis=1)
+    else:
+        frontier = jnp.zeros(B, bool)
+    return valid, in_depth, frontier

@@ -333,15 +333,15 @@ class _Codegen:
             return bounds
         if op is OpCode.DIVISIBLE:
             d = inst.divisor
+            from .executor import _divisible as _div
 
             def divisible(v):
                 t = type(v)
                 if t is not int and t is not float:
                     return True
-                if d == 0:
-                    return False
-                q = v / d
-                return q == int(q) if q == q and q not in (float("inf"), float("-inf")) else False
+                # shared spec-exact check (decimal re-check on inexact
+                # float quotients) -- keeps codegen == interpreter
+                return _div(v, d)
 
             return divisible
 

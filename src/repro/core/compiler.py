@@ -126,6 +126,9 @@ class CompiledSchema:
     options: CompilerOptions
     dialect: Dialect
     source: Any = None
+    # label id -> resolved $ref key, for diagnostics (tape unrolling
+    # reports and fallback reasons name the offending definition)
+    label_names: Dict[int, str] = field(default_factory=dict)
 
     def instruction_count(self) -> int:
         from .instructions import walk
@@ -1334,4 +1337,5 @@ def compile_schema(
         options=options,
         dialect=resolver.dialect,
         source=schema,
+        label_names={v: k for k, v in compiler._label_ids.items()},
     )

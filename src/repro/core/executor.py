@@ -563,12 +563,34 @@ def _eval_unevaluated_items(inst, target: list, ctx: EvalContext) -> bool:
 
 
 def _divisible(value: float, divisor: float) -> bool:
+    """Spec-exact ``multipleOf``.
+
+    JSON numbers are decimal: ``19.99`` IS a multiple of ``0.01`` even
+    though neither has an exact binary-float form and the float quotient
+    comes out 1998.9999...  The float fast path decides the common case;
+    inexact quotients are re-checked as exact rationals built from the
+    shortest decimal representation (``repr`` round-trips floats, so
+    this is the number the document actually wrote).
+    """
     if divisor == 0:
         return False
-    quotient = value / divisor
+    try:
+        quotient = value / divisor
+    except OverflowError:
+        return False
     if quotient != quotient or quotient in (float("inf"), float("-inf")):
         return False
-    return quotient == int(quotient)
+    # fast path only while floats still resolve integrality: at
+    # |quotient| >= 2^53 every float is integral, so "looks integral"
+    # proves nothing (1e30 is NOT a multiple of 7)
+    if quotient == int(quotient) and abs(quotient) < 2.0**53:
+        return True
+    from fractions import Fraction
+
+    try:
+        return Fraction(repr(value)) % Fraction(repr(divisor)) == 0
+    except (ValueError, ZeroDivisionError, OverflowError):
+        return False
 
 
 _FORMAT_CHECKS = {}

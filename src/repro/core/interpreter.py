@@ -220,11 +220,11 @@ class NaiveValidator:
             if isinstance(eM, (int, float)) and not isinstance(eM, bool) and not v < eM:
                 return False
         if "multipleOf" in s:
-            d = s["multipleOf"]
-            if d == 0:
-                return False
-            q = v / d
-            if q != q or q in (float("inf"), float("-inf")) or q != int(q):
+            from .executor import _divisible
+
+            # shared spec-exact check: decimal multipleOf (0.01) must
+            # accept decimal multiples (19.99) despite binary floats
+            if not _divisible(v, s["multipleOf"]):
                 return False
         return True
 

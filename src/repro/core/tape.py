@@ -9,10 +9,18 @@ assertion rows over all nodes at once (the ``assertion_eval`` kernel).
 The tape supports the *structural subset* of the DSL that dominates API
 payload validation: types, numeric/string/array/object bounds, specialized
 regexes, scalar const/enum, required, (closed) properties, nested
-objects/arrays, prefixItems/items.  Instructions outside the subset raise
-:class:`UnsupportedForBatch`, and callers fall back to the sequential
-executor -- the classic fast-path/slow-path split.  Coverage over the
-benchmark corpus is reported in EXPERIMENTS.md.
+objects/arrays, prefixItems/items, and -- since the bounded-unrolling
+change (DESIGN.md §9) -- shared and **recursive** ``$ref`` labels.
+``ControlLabel``/``ControlJump`` cycles are unrolled into the flat
+location tape up to a compile-time depth budget (``unroll_depth``); the
+locations where the budget ran out are *frontier* locations, and every
+transition edge into them carries the :data:`LOC_FRONTIER` sentinel so
+the batched executor can flag any document that reaches one as
+**undecided** (routed to the sequential oracle, never vacuously valid).
+Instructions outside the subset still raise :class:`UnsupportedForBatch`,
+and callers fall back to the sequential executor -- the classic
+fast-path/slow-path split.  Coverage over the benchmark corpus is
+reported in EXPERIMENTS.md.
 
 Layout (DESIGN.md §4-§5): assertion rows are stored **owner-sorted** as
 CSR windows (``loc_asrt_start``/``loc_asrt_len``, bounded by the static
@@ -41,7 +49,10 @@ code  name            semantics (precondition in parentheses)
 2     NUM_GT          (number)  num >  f0
 3     NUM_LE          (number)  num <= f0
 4     NUM_LT          (number)  num <  f0
-5     NUM_MULTIPLE    (number)  num divisible by f0 (f0 != 0)
+5     NUM_MULTIPLE    (number)  num divisible by f0 (f0 != 0); evaluated
+                      with a relative tolerance on the quotient (decimal
+                      ``multipleOf`` like 0.01 has no exact binary form,
+                      so exact f32 remainders would reject 19.99 % 0.01)
 6     STR_MINLEN      (string)  size >= i0
 7     STR_MAXLEN      (string)  size <= i0
 8     ARR_MINLEN      (array)   size >= i0
@@ -74,7 +85,16 @@ from .instructions import Instruction, Instructions, OpCode
 from .nodetypes import TYPE_BIT
 from .regex_opt import RegexKind
 
-__all__ = ["LocationTape", "UnsupportedForBatch", "build_tape", "try_build_tape", "AOP"]
+__all__ = [
+    "LocationTape",
+    "UnsupportedForBatch",
+    "build_tape",
+    "try_build_tape",
+    "AOP",
+    "LOC_FRONTIER",
+    "DEFAULT_UNROLL_DEPTH",
+    "DEFAULT_UNROLL_NODE_BUDGET",
+]
 
 
 class UnsupportedForBatch(ValueError):
@@ -106,6 +126,15 @@ class AOP:
 # special location ids
 LOC_UNTRACKED = -2  # no constraints below this point
 LOC_INVALID = -3  # reaching this location fails the document
+LOC_FRONTIER = -4  # the unroll budget ran out here: document undecided
+
+# $ref-recursion unrolling budgets (DESIGN.md §9): levels of label
+# re-expansion beyond the first, and a cap on total locations so
+# branching recursion (trees with many recursive children) cannot blow
+# the tape up exponentially -- the budget simply converts into earlier
+# frontiers, i.e. more sequential-oracle routing, never wrong verdicts.
+DEFAULT_UNROLL_DEPTH = 4
+DEFAULT_UNROLL_NODE_BUDGET = 4096
 
 # type code bits (shared canonical codes, see core.nodetypes)
 _TYPE_BIT = TYPE_BIT
@@ -123,6 +152,7 @@ class _Loc:
     item_start: int = 0
     prefix_locs: List[int] = field(default_factory=list)
     required_slots: Dict[str, int] = field(default_factory=dict)
+    frontier: bool = False  # a label expansion ran out of budget here
 
 
 @dataclass
@@ -203,6 +233,13 @@ class LocationTape:
     member_prop_start: Optional[np.ndarray] = None  # int32 (S,)
     member_prop_len: Optional[np.ndarray] = None  # int32 (S,)
     max_member_props: Optional[int] = None  # M-hat
+    # -- $ref-recursion unrolling (DESIGN.md §9) ------------------------
+    # ``loc_frontier[l]`` marks locations where the unroll budget ran
+    # out; every transition edge into them already carries the
+    # LOC_FRONTIER sentinel (so the executor needs no extra gather), the
+    # bool array is kept for introspection, linking and static skips.
+    loc_frontier: Optional[np.ndarray] = None  # bool (L,)
+    unroll_depth: int = 0  # budget used at build time (0: no labels)
 
     def __post_init__(self) -> None:
         if self.psort_member is None:
@@ -218,6 +255,8 @@ class LocationTape:
             self.member_prop_len = np.full(len(self.roots), n_real, np.int32)
         if self.max_member_props is None:
             self.max_member_props = int(self.member_prop_len.max()) if len(self.member_prop_len) else 0
+        if self.loc_frontier is None:
+            self.loc_frontier = np.zeros(len(self.loc_closed), bool)
 
     @property
     def n_props(self) -> int:
@@ -231,13 +270,55 @@ class LocationTape:
     def n_members(self) -> int:
         return len(self.roots)
 
+    @property
+    def n_frontier(self) -> int:
+        return int(np.count_nonzero(self.loc_frontier))
+
 
 class _TapeBuilder:
-    def __init__(self) -> None:
+    def __init__(
+        self,
+        labels: Optional[Dict[int, Instructions]] = None,
+        *,
+        unroll_depth: int = DEFAULT_UNROLL_DEPTH,
+        unroll_node_budget: int = DEFAULT_UNROLL_NODE_BUDGET,
+    ) -> None:
         self.locs: List[_Loc] = []
         self.prop_rows: List[Tuple[int, np.ndarray, int, int]] = []
         self.asrt_rows: List[dict] = []
         self._group_counter = 0
+        self.labels: Dict[int, Instructions] = dict(labels or {})
+        self.unroll_depth = max(1, int(unroll_depth))
+        self.unroll_node_budget = int(unroll_node_budget)
+        # active expansions per label along the current lowering path --
+        # the cycle detector.  A label already on the stack more than
+        # ``unroll_depth`` times stops expanding and marks a frontier.
+        self._label_stack: Dict[int, int] = {}
+
+    # -- label unrolling (DESIGN.md §9) --------------------------------
+
+    def expand_label(self, label: int, loc: _Loc) -> None:
+        """Expand ``label``'s body at ``loc``, bounded by the budgets.
+
+        Each re-expansion along one lowering path clones the label's
+        location subgraph one level deeper (property-transition rows of
+        level *d* wire to the level *d+1* clones because every
+        ``child_for_key`` call allocates fresh locations).  When either
+        budget runs out, ``loc`` becomes a *frontier* location instead:
+        documents reaching it are undecided, never vacuously valid.
+        """
+        children = self.labels.get(label)
+        if children is None:
+            raise UnsupportedForBatch(f"jump to unknown label {label}")
+        depth = self._label_stack.get(label, 0)
+        if depth > self.unroll_depth or len(self.locs) >= self.unroll_node_budget:
+            loc.frontier = True
+            return
+        self._label_stack[label] = depth + 1
+        try:
+            self.add_group(children, loc)
+        finally:
+            self._label_stack[label] = depth
 
     # -- locations -----------------------------------------------------
 
@@ -329,13 +410,27 @@ class _TapeBuilder:
 
     def build(self) -> LocationTape:
         L = len(self.locs)
+        # frontier locations (unroll budget exhausted): every transition
+        # edge INTO one is snapped to the LOC_FRONTIER sentinel, so the
+        # executor's ordinary negative-location propagation carries the
+        # "undecided" mark down the whole subtree for free and the
+        # frontier location itself (with its partial constraints) is
+        # never entered.  Frontier subtrees are likewise excluded from
+        # the depth DP, keeping the horizon tight.
+        frontier_mask = np.array([l.frontier for l in self.locs] or [False], bool)
+
+        def _snap(child: int) -> int:
+            if child >= 0 and frontier_mask[child]:
+                return LOC_FRONTIER
+            return child
+
         prefix_loc: List[int] = []
         loc_prefix_start = np.zeros(L, np.int32)
         loc_prefix_len = np.zeros(L, np.int32)
         for loc in self.locs:
             loc_prefix_start[loc.index] = len(prefix_loc)
             loc_prefix_len[loc.index] = len(loc.prefix_locs)
-            prefix_loc.extend(loc.prefix_locs)
+            prefix_loc.extend(_snap(p) for p in loc.prefix_locs)
         M = max(1, len(self.prop_rows))
         prop_owner = np.full(M, -1, np.int32)
         prop_hash = np.zeros((M, 8), np.uint32)
@@ -344,7 +439,7 @@ class _TapeBuilder:
         for r, (owner, lanes, child, slot) in enumerate(self.prop_rows):
             prop_owner[r] = owner
             prop_hash[r] = lanes
-            prop_child[r] = child
+            prop_child[r] = _snap(child)
             prop_slot[r] = slot
 
         # hash-sorted view: rows sorted lexicographically by lanes so equal
@@ -374,13 +469,15 @@ class _TapeBuilder:
         dist = np.zeros(max(1, L), np.int64)
         children: List[List[int]] = [[] for _ in range(L)]
         for owner, _lanes, child, _slot in self.prop_rows:
-            if child >= 0:
+            if child >= 0 and not frontier_mask[child]:
                 children[owner].append(child)
         for loc in self.locs:
             for v in (loc.addl_loc, loc.item_loc):
-                if v >= 0:
+                if v >= 0 and not frontier_mask[v]:
                     children[loc.index].append(v)
-            children[loc.index].extend(loc.prefix_locs)
+            children[loc.index].extend(
+                p for p in loc.prefix_locs if not frontier_mask[p]
+            )
         for u in range(L):
             for v in children[u]:
                 if v > u:
@@ -424,8 +521,12 @@ class _TapeBuilder:
             loc_asrt_len=loc_asrt_len,
             max_rows_per_loc=max_rows_per_loc,
             loc_closed=np.array([l.closed for l in self.locs] or [False], bool),
-            loc_addl=np.array([l.addl_loc for l in self.locs] or [-1], np.int32),
-            loc_item=np.array([l.item_loc for l in self.locs] or [-1], np.int32),
+            loc_addl=np.array(
+                [_snap(l.addl_loc) for l in self.locs] or [-1], np.int32
+            ),
+            loc_item=np.array(
+                [_snap(l.item_loc) for l in self.locs] or [-1], np.int32
+            ),
             loc_item_start=np.array([l.item_start for l in self.locs] or [0], np.int32),
             loc_prefix_start=loc_prefix_start if L else np.zeros(1, np.int32),
             loc_prefix_len=loc_prefix_len if L else np.zeros(1, np.int32),
@@ -447,6 +548,8 @@ class _TapeBuilder:
             asrt_u0=np.array([r["u0"] for r in asrt_rows] or [0], np.uint32),
             asrt_u1=np.array([r["u1"] for r in asrt_rows] or [0], np.uint32),
             asrt_hash=np.stack([r["lanes"] for r in asrt_rows] or [np.zeros(8, np.uint32)]),
+            loc_frontier=frontier_mask,
+            unroll_depth=self.unroll_depth if self.labels else 0,
         )
         return tape
 
@@ -674,8 +777,14 @@ def _h_array_prefix(b, inst, loc):
 
 
 def _h_control_label(b, inst, loc):
-    # non-recursive shared definitions: expand the children in place
-    b.add_group(inst.children, loc)
+    # shared/recursive definitions: the body expands in place, and any
+    # jumps back to this label re-expand through the bounded unroller
+    b.labels.setdefault(inst.label, inst.children)
+    b.expand_label(inst.label, loc)
+
+
+def _h_control_jump(b, inst, loc):
+    b.expand_label(inst.label, loc)
 
 
 _HANDLERS = {
@@ -710,24 +819,50 @@ _HANDLERS = {
     OpCode.LOOP_ITEMS_FROM: _h_loop_items_from,
     OpCode.ARRAY_PREFIX: _h_array_prefix,
     OpCode.CONTROL_LABEL: _h_control_label,
+    OpCode.CONTROL_JUMP: _h_control_jump,
 }
 
 
-def build_tape(compiled: CompiledSchema) -> LocationTape:
+def build_tape(
+    compiled: CompiledSchema,
+    *,
+    unroll_depth: int = DEFAULT_UNROLL_DEPTH,
+    unroll_node_budget: int = DEFAULT_UNROLL_NODE_BUDGET,
+) -> LocationTape:
     """Lower a compiled schema to the tensor tape; raises
-    :class:`UnsupportedForBatch` outside the structural subset."""
-    if compiled.labels:
-        # ControlJump needs runtime recursion -- outside the flat subset
-        raise UnsupportedForBatch("recursive/shared labels not batchable")
-    b = _TapeBuilder()
+    :class:`UnsupportedForBatch` outside the structural subset.
+
+    Shared and recursive ``$ref`` labels (``ControlLabel``/``ControlJump``)
+    are unrolled into the flat tape up to ``unroll_depth`` re-expansions
+    per label (and ``unroll_node_budget`` total locations); past the
+    budget the lowering marks *frontier* locations whose documents the
+    batched executor flags undecided (DESIGN.md §9).
+    """
+    b = _TapeBuilder(
+        compiled.labels,
+        unroll_depth=unroll_depth,
+        unroll_node_budget=unroll_node_budget,
+    )
     root = b.new_loc()
     b.add_group(compiled.instructions, root)
     return b.build()
 
 
-def try_build_tape(compiled: CompiledSchema) -> Tuple[Optional[LocationTape], str]:
+def try_build_tape(
+    compiled: CompiledSchema,
+    *,
+    unroll_depth: int = DEFAULT_UNROLL_DEPTH,
+    unroll_node_budget: int = DEFAULT_UNROLL_NODE_BUDGET,
+) -> Tuple[Optional[LocationTape], str]:
     """Build the tape or report why the schema is not batchable."""
     try:
-        return build_tape(compiled), ""
+        return (
+            build_tape(
+                compiled,
+                unroll_depth=unroll_depth,
+                unroll_node_budget=unroll_node_budget,
+            ),
+            "",
+        )
     except UnsupportedForBatch as exc:
         return None, str(exc)

@@ -36,9 +36,12 @@ class PipelineStats:
     # batchable records the depth-budgeted executor could not decide
     # (routed to the sequential oracle) -- observable, never silent.
     # ``oversize`` separately counts encoder-budget (max_nodes/max_depth)
-    # overflows so the two fallback causes are distinguishable
+    # overflows and ``unroll_overflow`` counts documents whose recursion
+    # outran the tape's $ref-unroll budget, so the three fallback causes
+    # are distinguishable
     undecided: int = 0
     oversize: int = 0
+    unroll_overflow: int = 0
 
 
 class AdmissionController:
@@ -100,6 +103,13 @@ class AdmissionController:
         return self._entry.stats.fallback_reason
 
     @property
+    def fallback_reasons(self) -> Dict[str, str]:
+        """Per-endpoint ``try_build_tape`` failure reasons (the real
+        strings, not a generic "fallback" flag) for every registered
+        endpoint outside the structural subset."""
+        return self.registry.fallback_reasons()
+
+    @property
     def batch_validator(self):
         """The linked-tape executor, or None when the default endpoint
         is outside the structural subset (or batching is disabled).
@@ -125,6 +135,7 @@ class AdmissionController:
             self.stats.batch_validated += counts.batch_validated
             self.stats.undecided += counts.undecided
             self.stats.oversize += counts.oversize
+            self.stats.unroll_overflow += counts.unroll_overflow
             self.stats.fallback_validated += counts.fallback_validated
         else:
             if len(endpoints) != len(records):

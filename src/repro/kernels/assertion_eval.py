@@ -75,8 +75,15 @@ def _eval_rows(ntype, isint, num, size, pfx0, pfx1, op, f0, i0, i1, u0, u1, hash
     r_gt = jnp.logical_or(~is_num, cmp_num > f0)
     r_le = jnp.logical_or(~is_num, cmp_num <= f0)
     r_lt = jnp.logical_or(~is_num, cmp_num < f0)
+    # NUM_MULTIPLE: tolerance on the quotient (same formula as the jnp
+    # reference, bit-identical) -- exact f32 remainders would reject
+    # decimal multiples like 19.99 % 0.01 whose divisor has no exact
+    # binary representation.  Capped at 0.25 so large quotients keep
+    # rejecting non-multiples (1000001 % 2 stays False).
     q = cmp_num / jnp.where(f0 == 0, jnp.ones_like(f0), f0)
-    divisible = jnp.logical_and(f0 != 0, q == jnp.floor(q))
+    q_near = jnp.floor(q + 0.5)
+    q_tol = jnp.minimum(1e-6 * jnp.maximum(jnp.abs(q), 1.0), 0.25)
+    divisible = jnp.logical_and(f0 != 0, jnp.abs(q - q_near) <= q_tol)
     r_mul = jnp.logical_or(~is_num, divisible)
 
     r_str_min = jnp.logical_or(~is_str, size >= i0)

@@ -51,8 +51,20 @@ def _eval_rows_ref(ntype, isint, num, size, str_pfx0, str_pfx1, op, f0, i0, i1, 
     r_gt = ~is_num | (num > f0)
     r_le = ~is_num | (num <= f0)
     r_lt = ~is_num | (num < f0)
+    # NUM_MULTIPLE: decimal divisors (0.01) have no exact binary form, so
+    # an exact quotient test would reject true decimal multiples
+    # (19.99 % 0.01).  Tolerance on the quotient, relative to its
+    # magnitude, matches the sequential executor's decimal-exact
+    # semantics to within f32 representation error (DESIGN.md §7).
+    # The 0.25 cap keeps the tolerance meaningful for large quotients:
+    # without it, 1e-6*|q| crosses 0.5 near |q|~5e5 and every value
+    # would pass (1000001 % 2 must stay False).  Past f32's integer
+    # range the quotient itself is integral and indistinguishable --
+    # the documented §7 precision caveat.
     q = num / jnp.where(f0 == 0, jnp.ones_like(f0), f0)
-    r_mul = ~is_num | ((f0 != 0) & (q == jnp.floor(q)))
+    q_near = jnp.floor(q + 0.5)
+    q_tol = jnp.minimum(1e-6 * jnp.maximum(jnp.abs(q), 1.0), 0.25)
+    r_mul = ~is_num | ((f0 != 0) & (jnp.abs(q - q_near) <= q_tol))
 
     r_str_min = ~is_str | (size >= i0)
     r_str_max = ~is_str | (size <= i0)

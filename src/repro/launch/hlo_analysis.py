@@ -52,6 +52,23 @@ _INSTR = re.compile(
 _SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _CALL_ATTR = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_OPERAND_NAME = re.compile(r"%([\w.\-]+)")
+
+
+def _operand_names(argstr: str) -> List[str]:
+    """Instruction-operand names from the parenthesized argument list.
+
+    Scheduled dumps write operands WITH their types -- ``dot(f32[64,128]{1,0}
+    %lhs, ...)`` -- so a naive comma-split yields ``f32[64`` (the commas
+    inside shape brackets), silently losing every operand-shape lookup:
+    dot FLOPs dropped their contracted-dim factor and HBM traffic dropped
+    all operand bytes.  Anchor on the ``%`` sigil instead; untyped,
+    sigil-free lists fall back to the comma split.
+    """
+    names = _OPERAND_NAME.findall(argstr)
+    if names:
+        return names
+    return [p.strip() for p in argstr.split(",") if p.strip()]
 
 
 def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
@@ -164,11 +181,10 @@ def _dot_flops(instr: _Instr, shapes: Dict[str, str]) -> float:
     """2 x output elems x contracted elems for dot/dot_general."""
     out_elems, _ = _shape_elems_bytes(instr.type_str)
     # contracted size = prod of lhs contracting dims, from operand shape
-    mm = re.search(r"\(([^)]*)\)", instr.line[instr.line.index("dot(") + 3 :] if "dot(" in instr.line else instr.line)
-    ops = re.search(r"dot\(([^)]*)\)", instr.line)
+    ops = re.search(r"(?:dot|convolution)\(([^)]*)\)", instr.line)
     lhs_name = None
     if ops:
-        parts = [p.strip().lstrip("%") for p in ops.group(1).split(",")]
+        parts = _operand_names(ops.group(1))
         if parts:
             lhs_name = parts[0]
     cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
@@ -261,8 +277,7 @@ def analyze_hlo(text: str) -> HloAnalysis:
                 in_b = 0
                 args = re.search(r"\(([^)]*)\)", instr.line.split("=", 1)[1])
                 if args:
-                    for a in args.group(1).split(","):
-                        a = a.strip().lstrip("%")
+                    for a in _operand_names(args.group(1)):
                         if a in shapes_global:
                             _, b = _shape_elems_bytes(shapes_global[a])
                             in_b += b

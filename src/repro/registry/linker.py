@@ -14,8 +14,9 @@ Relocation scheme (DESIGN.md §8):
 
 - **location-valued columns** (``prop_child_loc``, ``loc_addl``,
   ``loc_item``, ``prefix_loc``, owners) shift by ``loc_offsets[s]``;
-  the negative sentinels (``LOC_UNTRACKED``, ``LOC_INVALID``, ``-1``)
-  are preserved untouched.
+  the negative sentinels (``LOC_UNTRACKED``, ``LOC_INVALID``,
+  ``LOC_FRONTIER``, ``-1``) are preserved untouched -- a member's
+  $ref-unroll frontier edges stay frontier edges after relocation.
 - **assertion rows** concatenate in member order.  Rows are owner-sorted
   within each member and member ``s``'s locations all precede member
   ``s+1``'s, so the concatenation stays *globally* owner-sorted and the
@@ -68,6 +69,11 @@ class LinkedTape(LocationTape):
     prop_offsets: Optional[np.ndarray] = None  # int32 (S,) property-row offset
     asrt_offsets: Optional[np.ndarray] = None  # int32 (S,) assertion-row offset
     member_n_locations: Optional[np.ndarray] = None  # int32 (S,)
+    # per-member $ref-unroll metadata: the depth budget each member tape
+    # was built with and how many frontier locations it carries (0 for
+    # non-recursive members)
+    member_unroll_depths: Optional[np.ndarray] = None  # int32 (S,)
+    member_n_frontier: Optional[np.ndarray] = None  # int32 (S,)
 
     def member_of_location(self, loc: int) -> int:
         """Member index owning global location id ``loc``."""
@@ -123,6 +129,9 @@ class TapeSegment:
     asrt_u1: np.ndarray
     asrt_hash: np.ndarray
     max_group: int
+    # $ref-unroll facts (frontier locations mark exhausted budgets)
+    loc_frontier: np.ndarray
+    unroll_depth: int
 
     @property
     def n_props(self) -> int:
@@ -181,6 +190,8 @@ def segment_tape(tape: LocationTape) -> TapeSegment:
         asrt_u1=tape.asrt_u1[real_a],
         asrt_hash=tape.asrt_hash[real_a],
         max_group=int(tape.asrt_group.max()) if len(tape.asrt_group) else 0,
+        loc_frontier=tape.loc_frontier,
+        unroll_depth=tape.unroll_depth,
     )
 
 
@@ -283,6 +294,11 @@ def link_tapes(
         member_prop_start=prop_off.copy(),
         member_prop_len=np.array([s.n_props for s in segments], np.int32),
         max_member_props=max(s.n_props for s in segments),
+        # per-location frontier flags concatenate in member order (no
+        # relocation needed; LOC_FRONTIER sentinels in the location-
+        # valued columns above pass through ``_reloc`` untouched)
+        loc_frontier=cat([s.loc_frontier for s in segments]).astype(bool),
+        unroll_depth=max(s.unroll_depth for s in segments),
     )
 
     # empty-table placeholders, mirroring _TapeBuilder.build(): the
@@ -322,5 +338,9 @@ def link_tapes(
         prop_offsets=prop_off,
         asrt_offsets=asrt_off,
         member_n_locations=np.array([s.n_locations for s in segments], np.int32),
+        member_unroll_depths=np.array([s.unroll_depth for s in segments], np.int32),
+        member_n_frontier=np.array(
+            [int(np.count_nonzero(s.loc_frontier)) for s in segments], np.int32
+        ),
         **linked,
     )

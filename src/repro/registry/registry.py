@@ -39,7 +39,7 @@ import numpy as np
 
 from ..core import CompiledSchema, Validator, compile_schema
 from ..core.batch_executor import BatchValidator
-from ..core.tape import LocationTape, try_build_tape
+from ..core.tape import DEFAULT_UNROLL_DEPTH, LocationTape, try_build_tape
 from .linker import LinkedTape, TapeSegment, link_tapes, segment_tape
 
 __all__ = ["SchemaStats", "SchemaEntry", "SchemaRegistry", "AdmitCounts"]
@@ -52,7 +52,8 @@ class AdmitCounts:
     batch_validated: int = 0  # decided by the linked-tape launch
     undecided: int = 0  # batchable but past the depth budget -> fallback
     oversize: int = 0  # batchable but past the encoder node budget -> fallback
-    fallback_validated: int = 0  # sequential verdicts (incl. undecided/oversize)
+    unroll_overflow: int = 0  # recursion outran the $ref-unroll budget -> fallback
+    fallback_validated: int = 0  # sequential verdicts (incl. all of the above)
 
 
 @dataclass
@@ -70,6 +71,10 @@ class SchemaStats:
     a_hat: int = 0
     k: int = 0
     horizon: int = 0
+    # $ref-unroll facts: the depth budget the tape was built with and
+    # how many frontier locations it carries (0 = fully flat schema)
+    unroll_depth: int = 0
+    n_frontier: int = 0
 
 
 @dataclass
@@ -95,11 +100,13 @@ class SchemaRegistry:
         use_pallas: bool = False,
         layout: str = "csr",
         max_depth: int = 16,
+        unroll_depth: int = DEFAULT_UNROLL_DEPTH,
     ):
         self.engine = engine
         self.use_pallas = use_pallas
         self.layout = layout
         self.max_depth = max_depth
+        self.unroll_depth = unroll_depth
         self._entries: Dict[str, Dict[int, SchemaEntry]] = {}
         self._active: Dict[str, int] = {}  # endpoint -> serving version
         self._order: List[str] = []  # registration order = member order
@@ -146,7 +153,7 @@ class SchemaRegistry:
         validator = Validator(compiled, engine=self.engine)
         t_compile = time.perf_counter() - t0
         t0 = time.perf_counter()
-        tape, reason = try_build_tape(compiled)
+        tape, reason = try_build_tape(compiled, unroll_depth=self.unroll_depth)
         t_tape = time.perf_counter() - t0
         stats = SchemaStats(
             compile_seconds=t_compile,
@@ -162,6 +169,8 @@ class SchemaRegistry:
             stats.a_hat = tape.max_rows_per_loc
             stats.k = tape.max_hash_run
             stats.horizon = tape.max_loc_depth + 1
+            stats.unroll_depth = tape.unroll_depth
+            stats.n_frontier = tape.n_frontier
         versions = self._entries.setdefault(endpoint, {})
         version = self._next_version.get(endpoint, 0) + 1
         self._next_version[endpoint] = version
@@ -226,6 +235,21 @@ class SchemaRegistry:
 
     def versions(self, endpoint: str) -> List[int]:
         return sorted(self._entries.get(endpoint, ()))
+
+    def fallback_reasons(self) -> Dict[str, str]:
+        """endpoint -> ``try_build_tape`` failure reason, for every
+        serving entry outside the structural subset.
+
+        This is the *real* per-endpoint reason string (e.g. ``"instruction
+        LOOP_KEYS not batchable"``), previously recorded in
+        :class:`SchemaStats` but dropped on the serving/stats path --
+        ``ServeEngine`` and ``AdmissionController`` surface it.
+        """
+        return {
+            endpoint: self.get(endpoint).stats.fallback_reason
+            for endpoint in self._order
+            if not self.get(endpoint).stats.batchable
+        }
 
     @property
     def generation(self) -> int:
@@ -354,13 +378,15 @@ class SchemaRegistry:
             )
             pad_ids = np.concatenate([ids[fast], np.zeros(pad, np.int32)])
             bv = self.batch_validator()
-            valid, decided = bv.validate(table, pad_ids.astype(np.int32))
+            valid, decided, frontier = bv.validate_ex(table, pad_ids.astype(np.int32))
             for j, i in enumerate(fast):
                 if decided[j]:
                     verdicts[i] = bool(valid[j])
                     counts.batch_validated += 1
                 elif not table.ok[j]:
                     counts.oversize += 1  # encoder node/depth budget
+                elif frontier[j]:
+                    counts.unroll_overflow += 1  # $ref-unroll budget
                 else:
                     counts.undecided += 1  # executor depth budget
         for i, v in enumerate(verdicts):

@@ -84,7 +84,15 @@ class ServeStats:
     batch_validated: int = 0  # verdicts from the linked-tape launch
     fallback_validated: int = 0  # sequential (unbatchable or undecided)
     validated_only: int = 0  # admitted without a decodable text field
+    # why batchable rows fell back (distinct causes, never conflated):
+    undecided: int = 0  # executor depth budget
+    oversize: int = 0  # encoder node budget
+    unroll_overflow: int = 0  # $ref-unroll frontier reached
     by_endpoint: Dict[str, Dict[str, int]] = field(default_factory=dict)
+    # endpoint -> real try_build_tape failure reason (endpoints outside
+    # the structural subset; recorded at registration, not a generic
+    # "fallback" flag)
+    fallback_reasons: Dict[str, str] = field(default_factory=dict)
 
     def count(self, endpoint: str, key: str) -> None:
         per = self.by_endpoint.setdefault(endpoint, {"admitted": 0, "rejected": 0})
@@ -110,11 +118,14 @@ class ServeEngine:
         # registry also links all batchable endpoint tapes for
         # submit_batch's single-launch mixed admission.
         self.registry = registry if registry is not None else SchemaRegistry()
-        if request_schema is not None or "default" not in self.registry:
-            self.registry.register("default", request_schema or REQUEST_SCHEMA)
-        for name, schema in (endpoint_schemas or {}).items():
-            self.registry.register(name, schema)
         self.stats = ServeStats()
+        if request_schema is not None or "default" not in self.registry:
+            self.register_endpoint("default", request_schema or REQUEST_SCHEMA)
+        for name, schema in (endpoint_schemas or {}).items():
+            self.register_endpoint(name, schema)
+        # endpoints already present on a caller-provided registry get
+        # their fallback reasons surfaced too
+        self.stats.fallback_reasons.update(self.registry.fallback_reasons())
         self.slots: List[Optional[_Slot]] = [None] * serve_cfg.batch_slots
         self.queue: List[_Slot] = []
         self._next_id = 0
@@ -123,6 +134,36 @@ class ServeEngine:
         self._cache = None
 
     # -- admission ------------------------------------------------------------
+
+    def register_endpoint(self, endpoint: str, schema: Any):
+        """Register (or hot-swap) an endpoint schema, surfacing the real
+        tape-build outcome in the engine's stats: endpoints outside the
+        structural subset record their ``try_build_tape`` reason string
+        instead of a generic fallback flag."""
+        entry = self.registry.register(endpoint, schema)
+        if entry.stats.batchable:
+            self.stats.fallback_reasons.pop(endpoint, None)
+        else:
+            self.stats.fallback_reasons[endpoint] = entry.stats.fallback_reason
+        return entry
+
+    def endpoint_stats(self) -> Dict[str, Dict[str, Any]]:
+        """Per-endpoint serving view: admission counters merged with the
+        registry's compile-time facts (batchable, fallback reason,
+        unroll budget/frontiers)."""
+        out: Dict[str, Dict[str, Any]] = {}
+        for endpoint in self.registry.endpoints():
+            entry = self.registry.get(endpoint)
+            per: Dict[str, Any] = dict(
+                self.stats.by_endpoint.get(endpoint, {"admitted": 0, "rejected": 0})
+            )
+            per["version"] = entry.version
+            per["batchable"] = entry.stats.batchable
+            per["fallback_reason"] = entry.stats.fallback_reason
+            per["unroll_depth"] = entry.stats.unroll_depth
+            per["n_frontier"] = entry.stats.n_frontier
+            out[endpoint] = per
+        return out
 
     @property
     def validator(self):
@@ -176,6 +217,9 @@ class ServeEngine:
             )
             self.stats.batch_validated += counts.batch_validated
             self.stats.fallback_validated += counts.fallback_validated
+            self.stats.undecided += counts.undecided
+            self.stats.oversize += counts.oversize
+            self.stats.unroll_overflow += counts.unroll_overflow
             self.stats.validation_seconds += time.perf_counter() - t0
             for (i, endpoint, request), ok in zip(parsed, verdicts):
                 if ok:

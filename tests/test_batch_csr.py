@@ -194,6 +194,32 @@ class TestEnumOrGroups:
             assert same == (runs[r] > 1 and runs[r] == runs[r - 1])
 
 
+class TestMultipleOfPrecision:
+    def test_decimal_and_large_quotients_match_sequential(self):
+        schema = {"type": "number", "multipleOf": 0.01}
+        compiled = compile_schema(schema)
+        tape = build_tape(compiled)
+        seq = Validator(compiled)
+        docs = [19.99, 19.994, 0.07, 1.0, 0, 0.015, 3, -19.99]
+        table = encode_batch(docs, max_nodes=8)
+        valid, decided = BatchValidator(tape, use_pallas=False).validate(table)
+        assert decided.all()
+        assert valid.tolist() == [seq.is_valid(d) for d in docs]
+
+        # large quotients: the tolerance is capped, so 1000001 % 2 stays
+        # False on the batched path too (quotient 500000.5)
+        schema2 = {"type": "integer", "multipleOf": 2}
+        compiled2 = compile_schema(schema2)
+        tape2 = build_tape(compiled2)
+        seq2 = Validator(compiled2)
+        docs2 = [1000000, 1000001, 999999, 2000002]
+        table2 = encode_batch(docs2, max_nodes=8)
+        valid2, decided2 = BatchValidator(tape2, use_pallas=False).validate(table2)
+        assert decided2.all()
+        assert valid2.tolist() == [seq2.is_valid(d) for d in docs2]
+        assert valid2.tolist() == [True, False, False, True]
+
+
 class TestDepthBudget:
     def test_deeper_than_max_depth_is_undecided(self):
         schema = {"properties": {"a": {"properties": {"a": {"properties": {

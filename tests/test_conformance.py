@@ -54,6 +54,14 @@ CASES = [
     ("enum bool vs int", s2020(enum=[0, 1]), [
         (0, True), (1, True), (False, False), (True, False),
     ]),
+    # integer-valued float const/enum: JSON 1.0 and 1 are the same number
+    ("const integer-valued float", s2020(const=2.0), [
+        (2, True), (2.0, True), (2.5, False), (True, False), ("2", False),
+    ]),
+    ("enum integer-valued floats", s2020(enum=[1.0, 3.0, 4.5]), [
+        (1, True), (1.0, True), (3, True), (4.5, True), (4, False),
+        (2, False), (True, False),
+    ]),
     # ---------------- numbers ----------------
     ("minimum", s2020(minimum=1.1), [
         (1.1, True), (2, True), (1, False), ("x", True), (None, True),
@@ -71,6 +79,28 @@ CASES = [
     ]),
     ("multipleOf fraction", s2020(multipleOf=0.5), [
         (1.5, True), (1.25, False),
+    ]),
+    # decimal multipleOf has no exact binary form: the float remainder of
+    # 19.99 / 0.01 is nonzero, but per spec (decimal numbers) it IS a
+    # multiple -- the classic conformance bug of popular validators
+    ("multipleOf decimal precision", s2020(type="number", multipleOf=0.01), [
+        (19.99, True), (0.07, True), (1.0, True), (19.994, False),
+        (0.015, False), (0, True),
+    ]),
+    ("multipleOf tiny scale", s2020(multipleOf=1e-8), [
+        (3e-8, True), (1e-6, True), (2.5e-8, False),
+    ]),
+    ("multipleOf decimal divisor of ints", s2020(multipleOf=0.1), [
+        (1, True), (4.5, True), (4.55, False),
+    ]),
+    # large quotients: the integral-looking float fast path must not
+    # swallow non-multiples (quotient 500000.5; quotient >= 2^53 where
+    # every float is integral -- 1e30 is 10^30, not a multiple of 7)
+    ("multipleOf large quotient", s2020(multipleOf=2), [
+        (1000000, True), (1000001, False),
+    ]),
+    ("multipleOf huge value small divisor", s2020(multipleOf=7), [
+        (1e30, False), (7e30, True), (3e30, False),
     ]),
     # ---------------- strings ----------------
     ("minLength", s2020(minLength=2), [

@@ -16,6 +16,11 @@ from pathlib import Path
 import numpy as np
 import pytest
 
+# every test here spawns a fresh python + jax subprocess (the
+# XLA_FLAGS device-count flag must precede jax init): minutes, not
+# seconds -- deselect locally with -m "not slow"
+pytestmark = pytest.mark.slow
+
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 
