@@ -38,8 +38,9 @@ BATCH_SIZES = (64, 512, 4096)
 MAX_NODES = 64
 RESULTS = Path(__file__).resolve().parents[1] / "results"
 
-# skewed mix: completions dominate, moderation is the tail
-MIX = [("complete", 70), ("chat", 15), ("embed", 10), ("moderate", 5)]
+# skewed mix: completions dominate, moderation is the tail; charge is the
+# tagged-union endpoint (logical-applicator circuits, DESIGN.md §10)
+MIX = [("complete", 60), ("chat", 15), ("embed", 10), ("charge", 10), ("moderate", 5)]
 
 
 def _mk_request(endpoint: str, i: int, rng: random.Random):
@@ -66,6 +67,23 @@ def _mk_request(endpoint: str, i: int, rng: random.Random):
         req = {"input": "text " * rng.randint(1, 16), "dimensions": rng.choice([64, 256, 1024])}
         if bad:
             req["dimensions"] = 2
+    elif endpoint == "charge":
+        kind = rng.choice(["card", "bank", "wallet"])
+        if kind == "card":
+            method = {"kind": kind, "number": "4111111111111111", "cvv": "123"}
+        elif kind == "bank":
+            method = {"kind": kind, "iban": "DE89370400440532013000"}
+        else:
+            method = {"kind": kind, "wallet_id": f"w-{rng.randint(0, 999)}"}
+        req = {
+            "amount": rng.randint(1, 500_000),
+            "currency": rng.choice(["usd", "eur", "gbp"]),
+            "method": method,
+        }
+        if bad:
+            req["method"] = dict(method, kind=rng.choice(
+                [k for k in ("card", "bank", "wallet") if k != kind]
+            ))
     else:
         req = {"input": "msg " * rng.randint(1, 8), "category": rng.choice(["toxicity", "spam"])}
         if bad:

@@ -7,6 +7,7 @@ One module per paper table/figure:
   batched      -- beyond-paper TPU-form executor + coverage
   registry     -- beyond-paper multi-tenant mixed traffic (linked tape)
   recursive    -- beyond-paper recursive-$ref unrolling (frontier routing)
+  logical      -- beyond-paper logical-applicator circuits (tagged unions)
   roofline     -- §Roofline terms from the dry-run artifacts
 
 Prints ``name,us_per_call,derived`` CSV lines and writes the full report
@@ -31,6 +32,7 @@ def main() -> None:
         ablations,
         batched,
         compile_time,
+        logical,
         recursive,
         registry,
         roofline,
@@ -44,6 +46,7 @@ def main() -> None:
         ("batched", batched),
         ("registry", registry),
         ("recursive", recursive),
+        ("logical", logical),
         ("roofline", roofline),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Conformance corpus gate: every engine (naive / interpreter / codegen /
+# batched) must agree with the vendored JSON-Schema-Test-Suite-style
+# cases for the logical/unevaluated/uniqueItems keywords.  Emits
+# results/conformance_summary.json for the CI artifact upload.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+exec python scripts/conformance.py "$@"

@@ -28,6 +28,16 @@ bit-identically to per-schema dispatch (DESIGN.md §8).  The pipeline:
    window (groups are contiguous by construction).  O(N*A-hat) memory and
    compute instead of the dense O(N*A) matrix plus a rank-3 (N, A, G)
    one-hot reduction.
+3b. **Circuit reduce** (DESIGN.md §10) -- rows wired to logical-applicator
+   circuits (``anyOf``/``oneOf``/``not``/``if`` over the scalar subset)
+   are excluded from the plain AND/OR reduction; per-document *anchor*
+   node indices (one masked reduction per circuit-relevant location)
+   feed tiny (B, U) leaf gathers, and a statically-unrolled bottom-up
+   pass (trace depth bounded by the tape's ``max_circ_depth``) reduces
+   the circuit (AND/OR/XOR1-count/NOT), gating every node on its owner
+   location's presence so absent targets stay vacuously true and other
+   members' circuits are no-ops on a linked tape.  Root values AND into
+   the verdict.
 4. **Reduce** -- AND over nodes per document, plus a per-document
    ``decided`` flag: nodes deeper than the ``max_depth`` budget never
    receive a location, so their documents are flagged undecided and must
@@ -58,14 +68,109 @@ import numpy as np
 
 from ..kernels import ops as kops
 from .nodetypes import T_ARR as _T_ARR, T_OBJ as _T_OBJ
-from .tape import LOC_FRONTIER, LOC_INVALID, LOC_UNTRACKED, LocationTape
+from .tape import (
+    CK_AND,
+    CK_NOT,
+    CK_OR,
+    LOC_FRONTIER,
+    LOC_INVALID,
+    LOC_UNTRACKED,
+    LocationTape,
+)
 
 __all__ = ["BatchValidator"]
 
 _BIG = jnp.int32(2**30)
+_CIRC_FLAG = 1 << 20  # packed circuit-membership bit in asrt_gcode
+
+
+def _group_circ_map(tape: LocationTape) -> np.ndarray:
+    """OR-group id -> owning circuit node (-1 for plain enum groups).
+
+    All rows of one group share a circuit by construction (a group is
+    emitted by a single enum lowering), so any row of the group may
+    supply the mapping.
+    """
+    groups = np.asarray(tape.asrt_group)
+    circ = np.asarray(tape.asrt_circ)
+    n_groups = (int(groups.max()) + 1) if groups.size else 1
+    out = np.full(max(1, n_groups), -1, np.int32)
+    for g, c in zip(groups.tolist(), circ.tolist()):
+        if g > 0 and c >= 0:
+            out[g] = c
+    return out
+
+
+def _circuit_leaf_units(tape: LocationTape):
+    """Static circuit-leaf wiring: which row/group feeds which node.
+
+    Returns ``(and_units, group_units)``: AND units are
+    ``(circ, owner_loc, row, window_slot)`` for plain circuit rows, group
+    units ``(circ, owner_loc, group_id, window_slot_of_start)`` for
+    circuit enum groups (rows are (owner, group)-sorted, so the first row
+    of a group is its window start).  Everything here is compile-time.
+    """
+    owner = np.asarray(tape.asrt_owner)
+    grp = np.asarray(tape.asrt_group)
+    circ = np.asarray(tape.asrt_circ)
+    start = np.asarray(tape.loc_asrt_start)
+    and_units, group_units = [], []
+    seen_groups = set()
+    for r in range(len(owner)):
+        c = int(circ[r])
+        if c < 0:
+            continue
+        o = int(owner[r])
+        g = int(grp[r])
+        s = r - int(start[o])
+        if g == 0:
+            and_units.append((c, o, r, s))
+        elif g not in seen_groups:
+            seen_groups.add(g)
+            group_units.append((c, o, g, s))
+    return tuple(and_units), tuple(group_units)
+
+
+def _circuit_static_wiring(tape: LocationTape):
+    """All compile-time circuit metadata for the executor.
+
+    Circuit work must not tax non-circuit traffic: every location a
+    circuit touches (node owners + leaf-unit owners) gets a compact
+    *anchor rank*, so the executor can resolve, per document, the single
+    node at each such location (unique-path precondition) with ONE small
+    scatter and evaluate leaves/presence as (B, U)/(B, C) gathers --
+    never (B*N, U) masking over the whole batch.
+    """
+    and_units, group_units = _circuit_leaf_units(tape)
+    circ_owner = np.asarray(tape.circ_owner, np.int32)
+    unit_owners = [u[1] for u in and_units] + [u[1] for u in group_units]
+    owner_locs = np.unique(
+        np.concatenate([circ_owner, np.asarray(unit_owners, np.int32)])
+    ) if (len(circ_owner) or unit_owners) else np.zeros(0, np.int32)
+    rank_of = {l: r for r, l in enumerate(owner_locs.tolist())}
+    return {
+        "kind": np.asarray(tape.circ_kind, np.int32),
+        "parent": np.asarray(tape.circ_parent, np.int32),
+        "owner": circ_owner,
+        # OR-group id -> owning circuit (-1 plain), for the dense
+        # layout's group-level reduction (rows of one group share it)
+        "group_circ": _group_circ_map(tape),
+        "and_units": and_units,
+        "group_units": group_units,
+        "owner_locs": owner_locs,
+        "circ_ranks": np.asarray([rank_of[int(l)] for l in circ_owner], np.int32),
+        "and_ranks": np.asarray([rank_of[u[1]] for u in and_units], np.int32),
+        "group_ranks": np.asarray([rank_of[u[1]] for u in group_units], np.int32),
+    }
 
 
 def _tape_consts(tape: LocationTape) -> Dict[str, jnp.ndarray]:
+    # the packed gcode column reserves bit 20 for circuit membership: a
+    # linked tape accumulating that many distinct OR-group ids must fail
+    # loudly, never silently misdecode enum rows as circuit rows
+    assert int(np.asarray(tape.asrt_group).max(initial=0)) < _CIRC_FLAG, (
+        "OR-group id space exceeds the gcode circuit-flag bit"
+    )
     return {
         "prop_owner": jnp.asarray(tape.prop_owner),
         "prop_hash": jnp.asarray(tape.prop_hash),
@@ -104,6 +209,16 @@ def _tape_consts(tape: LocationTape) -> Dict[str, jnp.ndarray]:
         "asrt_u0": jnp.asarray(tape.asrt_u0),
         "asrt_u1": jnp.asarray(tape.asrt_u1),
         "asrt_hash": jnp.asarray(tape.asrt_hash),
+        "asrt_circ": jnp.asarray(tape.asrt_circ),
+        # group id + circuit-membership flag packed into one column so
+        # the windowed path pays ONE gather for both (group ids stay far
+        # below the flag bit)
+        "asrt_gcode": jnp.asarray(
+            (
+                np.asarray(tape.asrt_group)
+                + np.where(np.asarray(tape.asrt_circ) >= 0, _CIRC_FLAG, 0)
+            ).astype(np.int32)
+        ),
         "psort_member": jnp.asarray(tape.psort_member),
         # a frontier root (degenerate: the unroll budget died at the
         # root) must seed documents with the sentinel, not location 0
@@ -141,6 +256,12 @@ class BatchValidator:
         self.m_hat = max(1, tape.max_member_props)
         # static: tapes without frontier locations skip the detection scan
         self.has_frontier = tape.n_frontier > 0
+        # logical-applicator circuits (DESIGN.md §10): all wiring is
+        # compile-time -- kept as host numpy so the per-level reduce can
+        # slice/scatter with static indices.  Circuit-free tapes (the
+        # common case) statically skip every circuit op.
+        self.n_circuits = tape.n_circuits
+        self._circuits = _circuit_static_wiring(tape)
         self._consts = _tape_consts(tape)
         self._fn = jax.jit(
             functools.partial(
@@ -155,6 +276,8 @@ class BatchValidator:
                 m_hat=self.m_hat,
                 n_members=tape.n_members,
                 has_frontier=self.has_frontier,
+                circuits=self._circuits,
+                n_circuits=self.n_circuits,
             )
         )
 
@@ -418,8 +541,23 @@ def _segment_or_suffix(vals: jnp.ndarray, grp: jnp.ndarray) -> jnp.ndarray:
     return jnp.flip(out, axis=1)
 
 
-def _assertions_csr(loc, node_cols, consts, *, use_pallas: bool, n_window: int):
-    """Windowed assertion evaluation + segmented OR-group reduction."""
+def _assertions_csr(
+    loc,
+    node_cols,
+    consts,
+    *,
+    use_pallas: bool,
+    n_window: int,
+    n_circuits: int,
+):
+    """Windowed assertion evaluation + segmented OR-group reduction.
+
+    Returns ``(asrt_ok, passes, seg_any)``: the per-node verdict over
+    *plain* rows (rows wired to a circuit are excluded from the plain
+    reduction), plus the raw window pass matrix and per-window segmented
+    group OR for the caller's circuit-leaf gathers (None without
+    circuits).
+    """
     A = consts["asrt_op"].shape[0]
     tracked = loc >= 0
     loc_safe = jnp.where(tracked, loc, 0)
@@ -441,8 +579,10 @@ def _assertions_csr(loc, node_cols, consts, *, use_pallas: bool, n_window: int):
         node_cols, w_cols, use_pallas=use_pallas
     ).astype(bool)  # (BN, W)
 
-    grp = jnp.where(w_valid, consts["asrt_group"][w_rows], 0)
-    is_and = w_valid & (grp == 0)
+    gcode = jnp.where(w_valid, consts["asrt_gcode"][w_rows], 0)
+    grp = gcode & jnp.int32(_CIRC_FLAG - 1)
+    in_circ = gcode >= _CIRC_FLAG  # constant-folds False on circuit-free tapes
+    is_and = w_valid & (grp == 0) & ~in_circ
     and_ok = jnp.all(jnp.where(is_and, passes, True), axis=1)
 
     # enum OR-groups: group passes iff any of its (contiguous) rows passes
@@ -452,8 +592,129 @@ def _assertions_csr(loc, node_cols, consts, *, use_pallas: bool, n_window: int):
     is_start = (grp > 0) & jnp.concatenate(
         [first_col, grp[:, 1:] != grp[:, :-1]], axis=1
     )
-    or_ok = jnp.all(jnp.where(is_start, seg_any, True), axis=1)
-    return and_ok & or_ok
+    or_ok = jnp.all(jnp.where(is_start & ~in_circ, seg_any, True), axis=1)
+    asrt_ok = and_ok & or_ok
+
+    if not n_circuits:
+        return asrt_ok, None, None
+    return asrt_ok, passes, seg_any
+
+
+def _circuit_anchors(loc, circuits, B: int, N: int):
+    """(B, O) in-document node index at each circuit-relevant location.
+
+    -1 where the document does not instantiate the location.  The
+    unique-path precondition guarantees at most one node per (document,
+    location), so a masked max-reduction per location resolves every
+    anchor; all further circuit work is (B, U)-sized gathers.
+    """
+    owner_locs = circuits["owner_locs"]
+    loc_r = loc.reshape(B, N)
+    n_idx = jnp.arange(N, dtype=jnp.int32)[None, :]  # (1, N)
+    # one masked max-reduction per circuit-relevant location (O is small,
+    # and a static loop of reductions beats an XLA scatter by a lot on
+    # CPU for these shapes)
+    cols = [
+        jnp.max(jnp.where(loc_r == int(o), n_idx, -1), axis=1)
+        for o in owner_locs.tolist()
+    ]
+    return jnp.stack(cols, axis=1) if cols else jnp.zeros((B, 0), jnp.int32)
+
+
+def _anchor_gather(node_at, mat, ranks, cols, B: int, N: int):
+    """(B, U) values of static columns of ``mat`` at anchored nodes.
+
+    ``mat`` is (B*N, cols); unit u reads ``mat[anchor, cols[u]]`` at its
+    owner's anchor node, vacuous-true where the anchor is absent.
+    """
+    rows = node_at[:, np.asarray(ranks, np.int32)]  # (B, U)
+    safe = jnp.maximum(rows, 0)
+    flat = jnp.arange(B, dtype=jnp.int32)[:, None] * N + safe
+    vals = mat[flat, jnp.asarray(cols, np.int32)[None, :]]
+    return jnp.where(rows >= 0, vals, True)
+
+
+def _leaf_values(node_at, circuits, B: int, N: int, *, and_mat, group_mat, and_cols, group_cols):
+    """Per-document circuit-leaf values via anchored gathers.
+
+    ``and_mat``/``group_mat`` are (B*N, cols) value matrices; each leaf
+    unit reads one static column (``and_cols``/``group_cols``, per
+    layout: window slot or row id / group verdict) at its owner
+    location's anchor node.  Returns {circuit id: [(B,) bool, ...]}.
+    """
+    and_units, group_units = circuits["and_units"], circuits["group_units"]
+    out = {}
+    if and_units:
+        v = _anchor_gather(node_at, and_mat, circuits["and_ranks"], and_cols, B, N)
+        for u, unit in enumerate(and_units):
+            out.setdefault(unit[0], []).append(v[:, u])
+    if group_units:
+        v = _anchor_gather(node_at, group_mat, circuits["group_ranks"], group_cols, B, N)
+        for u, unit in enumerate(group_units):
+            out.setdefault(unit[0], []).append(v[:, u])
+    return out
+
+
+def _circuit_presence(node_at, circuits):
+    """(B, C) bool: does the document instantiate each circuit's owner
+    location?  Gated circuits at absent locations are vacuously true
+    (sequential engines skip instructions whose target is missing)."""
+    return node_at[:, np.asarray(circuits["circ_ranks"], np.int32)] >= 0
+
+
+def _reduce_circuits(leaf_vals, present, circuits, *, n_circuits: int):
+    """Bottom-up circuit reduce -> (B,) root conjunction.
+
+    ``leaf_vals`` maps circuit ids to their per-document leaf values
+    (from :func:`_leaf_values`).  All wiring (kinds, parents) is
+    compile-time numpy, so the reduce unrolls into straight-line
+    elementwise ops at trace time -- one AND/OR/count op per circuit
+    edge, no gathers or scatters (XLA scatters are pathologically slow
+    for this shape on CPU).  Children always have larger ids than their
+    parent, so one descending pass evaluates the DAG in topological
+    order; the tape's ``max_circ_depth`` bounds the dependency depth of
+    the emitted ops at compile time.
+    """
+    kind = circuits["kind"]
+    parent = circuits["parent"]
+    B = present.shape[0]
+    children = [[] for _ in range(n_circuits)]
+    roots = []
+    for c in range(n_circuits):
+        p = int(parent[c])
+        if p >= 0:
+            children[p].append(c)
+        else:
+            roots.append(c)
+    vals = [None] * n_circuits
+    for c in range(n_circuits - 1, -1, -1):
+        k = int(kind[c])
+        ch = children[c]
+        if k == CK_OR:
+            v = jnp.zeros(B, bool)
+            for d in ch:
+                v = v | vals[d]
+        elif k == CK_AND or k == CK_NOT:
+            v = jnp.ones(B, bool)
+            for lv in leaf_vals.get(c, ()):
+                v = v & lv
+            for d in ch:
+                v = v & vals[d]
+            if k == CK_NOT:
+                v = ~v
+        else:  # CK_XOR1: exactly one child true
+            cnt = jnp.zeros(B, jnp.int32)
+            for d in ch:
+                cnt = cnt + vals[d].astype(jnp.int32)
+            v = cnt == 1
+        # presence gate: a circuit whose owner location has no node is
+        # vacuously true (also makes other members' circuits no-ops on a
+        # linked tape)
+        vals[c] = v | ~present[:, c]
+    ok = jnp.ones(B, bool)
+    for r in roots:
+        ok = ok & vals[r]
+    return ok
 
 
 def _validate_batch(
@@ -470,6 +731,8 @@ def _validate_batch(
     m_hat: int,
     n_members: int,
     has_frontier: bool = False,
+    circuits=None,
+    n_circuits: int = 0,
 ):
     # the tape caps trackable depth at compile time: below
     # max_loc_depth + 1 every location is untracked or under an invalid
@@ -510,13 +773,27 @@ def _validate_batch(
         "is_int": flat(cols["is_int"]),
         "num": flat(cols["num"]).astype(jnp.float32),
         "size": size,
+        "acquired": acquired,
         "str_hash": flat(cols["str_hash"]),
         "str_prefix": flat(cols["str_prefix"]),
     }
+    leaf_args = None  # (and_mat, group_mat, and_cols, group_cols)
     if layout == "csr":
-        asrt_ok = _assertions_csr(
-            loc, node_cols, consts, use_pallas=use_pallas, n_window=n_window
+        asrt_ok, w_passes, w_seg_any = _assertions_csr(
+            loc,
+            node_cols,
+            consts,
+            use_pallas=use_pallas,
+            n_window=n_window,
+            n_circuits=n_circuits,
         )
+        if n_circuits:
+            leaf_args = (
+                w_passes,
+                w_seg_any,
+                [u[3] for u in circuits["and_units"]],
+                [u[3] for u in circuits["group_units"]],
+            )
     else:
         asrt_cols = {
             "op": consts["asrt_op"],
@@ -532,12 +809,14 @@ def _validate_batch(
         ).astype(bool)  # (B*N, A)
         applies = loc[:, None] == consts["asrt_owner"][None, :]  # (B*N, A)
 
-        is_and_row = consts["asrt_group"] == 0
+        in_circ_row = consts["asrt_circ"] >= 0  # (A,)
+        is_and_row = (consts["asrt_group"] == 0) & ~in_circ_row
         and_ok = jnp.all(jnp.where(applies & is_and_row[None, :], passes, True), axis=1)
 
         # enum OR-groups: group passes iff it does not apply or any row matches
         groups = consts["asrt_group"]
         n_groups = int(np.asarray(groups).max()) + 1
+        group_circ = circuits["group_circ"] if n_circuits else None
         if n_groups > 1:
             onehot = (
                 groups[None, :, None]
@@ -545,14 +824,51 @@ def _validate_batch(
             )  # (1, A, G-1)
             gm = jnp.any((applies & passes)[:, :, None] & onehot, axis=1)  # (B*N, G-1)
             ga = jnp.any(applies[:, :, None] & onehot, axis=1)
-            or_ok = jnp.all(jnp.logical_or(~ga, gm), axis=1)
+            gval = jnp.logical_or(~ga, gm)  # (B*N, G-1) per-node group verdict
+            if n_circuits:
+                plain_g = jnp.asarray(group_circ[1:] < 0)[None, :]
+                or_ok = jnp.all(gval | ~plain_g, axis=1)
+            else:
+                or_ok = jnp.all(gval, axis=1)
         else:
             or_ok = jnp.ones(B * N, bool)
         asrt_ok = and_ok & or_ok
 
+        if n_circuits:
+            # circuit-leaf sources, bit-identical to the CSR path: AND
+            # leaf rows read their applied pass (the anchor node IS the
+            # applying node), enum leaf groups their per-node group
+            # verdict
+            leaf_args = (
+                passes,
+                gval if n_groups > 1 else jnp.ones((B * N, 1), bool),
+                [u[2] for u in circuits["and_units"]],
+                [u[2] - 1 for u in circuits["group_units"]],
+            )
+
     # ---- 4. reduce -----------------------------------------------------------
     node_valid = ((loc != LOC_INVALID) & asrt_ok & required_ok) | is_pad
     valid = jnp.all(node_valid.reshape(B, N), axis=1)
+
+    # logical-applicator circuits (DESIGN.md §10): per-document leaves ->
+    # bounded-depth reduce -> AND of gated root values into the verdict
+    if n_circuits:
+        node_at = _circuit_anchors(loc, circuits, B, N)
+        and_mat, group_mat, and_cols, group_cols = leaf_args
+        leaf_vals = _leaf_values(
+            node_at,
+            circuits,
+            B,
+            N,
+            and_mat=and_mat,
+            group_mat=group_mat,
+            and_cols=and_cols,
+            group_cols=group_cols,
+        )
+        present = _circuit_presence(node_at, circuits)
+        valid = valid & _reduce_circuits(
+            leaf_vals, present, circuits, n_circuits=n_circuits
+        )
 
     # depth-budget coverage: a non-root, non-pad node that never received a
     # location sits below the max_depth horizon -- its document's verdict

@@ -527,7 +527,10 @@ class _Codegen:
                 (self.group(guard), prefix, sees_all)
                 for guard, prefix, sees_all in inst.branches
             )
-            contains = tuple(self.group(g) for g in inst.contains_groups)
+            contains = tuple(
+                (self.group(guard) if guard else None, self.group(group))
+                for guard, group in inst.contains_groups
+            )
             static_prefix = inst.static_prefix
 
             def uneval_items(v):
@@ -539,9 +542,11 @@ class _Codegen:
                         if sees_all:
                             return True
                         prefix = max(prefix, bp)
+                # branch-gated contains annotations (guard None = unconditional)
+                active = [g for guard, g in contains if guard is None or guard(v)]
                 for i in range(prefix, len(v)):
                     item = v[i]
-                    if contains and any(g(item) for g in contains):
+                    if active and any(g(item) for g in active):
                         continue
                     if not child(item):
                         return False

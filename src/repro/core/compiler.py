@@ -180,7 +180,9 @@ class _ItemCoverage:
     prefix: int = 0
     sees_all: bool = False
     branches: List[Tuple[Tuple[Any, ...], int, bool]] = field(default_factory=list)
-    contains_schemas: List[Any] = field(default_factory=list)
+    # (guard schema chain, contains schema): annotations from a ``contains``
+    # nested in a branch apply only when that branch validates
+    contains_schemas: List[Tuple[Tuple[Any, ...], Any]] = field(default_factory=list)
 
 
 class _Compiler:
@@ -1227,7 +1229,7 @@ class _Compiler:
         prefix = len(prefix_schemas)
         sees_all = items_schema is not None or "unevaluatedItems" in schema
         if "contains" in schema:
-            cov.contains_schemas.append(schema["contains"])
+            cov.contains_schemas.append((guards, schema["contains"]))
         if guards:
             if prefix or sees_all:
                 cov.branches.append((guards, prefix, sees_all))
@@ -1285,9 +1287,15 @@ class _Compiler:
         if not children:
             return []
         spath = f"{schema_path}/unevaluatedItems"
-        contains_groups = tuple(
-            tuple(self.compile(cs, base, spath + "/contains")) for cs in cov.contains_schemas
-        )
+        contains_groups = []
+        for guards, cs in cov.contains_schemas:
+            guard_instructions: List[Instruction] = []
+            for g in guards:
+                guard_instructions.extend(self.compile(g, base, spath + "/guard"))
+            contains_groups.append(
+                (tuple(guard_instructions), tuple(self.compile(cs, base, spath + "/contains")))
+            )
+        contains_groups = tuple(contains_groups)
         if not cov.branches and not contains_groups:
             # static residue == LoopItemsFrom (first-level-equivalent form)
             if cov.prefix == 0:

@@ -154,11 +154,18 @@ def json_equal(a: Any, b: Any) -> bool:
 
 
 def canonical(value: Any) -> Any:
-    """Hashable canonical form (uniqueItems in O(n) via a set)."""
+    """Hashable canonical form (uniqueItems in O(n) via a set).
+
+    Must agree with :func:`json_equal` pairwise semantics: numbers keep
+    their native type (Python's cross-type ``==``/``hash`` already make
+    ``1`` and ``1.0`` collide) instead of coercing through ``float``,
+    which would merge distinct integers past 2**53 -- ``[2**53, 2**53+1]``
+    has no duplicate.
+    """
     if isinstance(value, bool):
         return ("b", value)
     if isinstance(value, (int, float)):
-        return ("n", float(value))
+        return ("n", value)
     if isinstance(value, str):
         return ("s", value)
     if value is None:

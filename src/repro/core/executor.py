@@ -546,10 +546,17 @@ def _eval_unevaluated_items(inst, target: list, ctx: EvalContext) -> bool:
             if sees_all:
                 return True
             prefix = max(prefix, br_prefix)
+    # contains annotations apply only when their branch guard validates --
+    # a contains inside a FAILED anyOf branch annotates nothing
+    active_contains = [
+        group
+        for guard, group in inst.contains_groups
+        if not guard or _eval_group(guard, target, ctx)
+    ]
     for i in range(prefix, len(target)):
         item = target[i]
-        if inst.contains_groups and any(
-            _eval_group(g, item, ctx) for g in inst.contains_groups
+        if active_contains and any(
+            _eval_group(g, item, ctx) for g in active_contains
         ):
             continue  # evaluated by contains (2020-12 annotation semantics)
         if not _eval_group(inst.children, item, ctx):

@@ -648,9 +648,12 @@ class LoopUnevaluatedItems(Instruction):
     static_prefix: int = 0
     static_all: bool = False
     branches: Tuple[Tuple[Instructions, int, bool], ...] = ()
-    # ``contains`` annotations: an item is evaluated when it matches any of
-    # these groups (per-item guards, unlike ``branches`` which guard once).
-    contains_groups: Tuple[Instructions, ...] = ()
+    # ``contains`` annotations: (branch guard, contains group) pairs.  When
+    # the guard validates the whole array (empty guard = unconditional),
+    # items matching the group are evaluated.  The guard gating matters:
+    # a ``contains`` inside a *failed* anyOf/oneOf branch contributes no
+    # annotations (2020-12 annotation semantics).
+    contains_groups: Tuple[Tuple[Instructions, Instructions], ...] = ()
     children: Instructions = ()
 
     def __post_init__(self):
@@ -659,7 +662,9 @@ class LoopUnevaluatedItems(Instruction):
     def children_groups(self):
         groups = [self.children]
         groups.extend(guard for guard, _, _ in self.branches)
-        groups.extend(self.contains_groups)
+        for guard, group in self.contains_groups:
+            groups.append(guard)
+            groups.append(group)
         return tuple(groups)
 
     def cost(self):

@@ -65,18 +65,38 @@ code  name            semantics (precondition in parentheses)
 15    CONST_BOOL      value is boolean f0
 16    CONST_NUM       value is number f0
 17    STR_EQ_PRE      (string)  equality via hash lanes (non-strings pass)
+18    OBJ_HAS_SLOT    (object)  required-slot bit i0 is acquired, i.e. the
+                      object defines the property wired to that slot
+                      (conditional ``required`` inside logical applicators)
 ====  ==============  =======================================================
 
 Rows sharing a nonzero ``asrt_group`` form an OR-group (``enum``); rows with
 group 0 are ANDed individually with precondition semantics.  Within a CSR
 window the AND rows come first and each OR-group is contiguous (the
 executor's segmented-scan reduction relies on this).
+
+Logical applicators (DESIGN.md §10): ``anyOf``/``oneOf``/``not``/``if``
+(and the CISC ``When*`` conditions) over the scalar-assertion subset lower
+into a per-tape **boolean group circuit**.  Each circuit node has a kind
+(:data:`CK_AND`/:data:`CK_OR`/:data:`CK_XOR1`/:data:`CK_NOT`), an owner
+location, and an optional parent node; assertion rows carry ``asrt_circ``
+(-1 for plain rows) wiring them as leaves of their circuit node.  The
+batched executor aggregates leaf rows per document (vacuously true when
+the leaf's location has no node -- the tensor form of "absent target =>
+instruction skipped"), reduces the circuit bottom-up with a bounded-depth
+level sweep (``max_circ_depth`` levels, compile-time constant), gates
+every node on its owner location's presence, and ANDs root-node values
+into the document verdict.  Soundness requires each circuit-owning
+location to be instantiated at most once per document, so circuits are
+only lowered at *unique-path* locations (reached from the root purely via
+property edges); applicators under ``items``/``additionalProperties``/
+``prefixItems`` still raise :class:`UnsupportedForBatch`.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -94,6 +114,10 @@ __all__ = [
     "LOC_FRONTIER",
     "DEFAULT_UNROLL_DEPTH",
     "DEFAULT_UNROLL_NODE_BUDGET",
+    "CK_AND",
+    "CK_OR",
+    "CK_XOR1",
+    "CK_NOT",
 ]
 
 
@@ -121,6 +145,14 @@ class AOP:
     CONST_BOOL = 15
     CONST_NUM = 16
     STR_EQ_PRE = 17
+    OBJ_HAS_SLOT = 18
+
+
+# circuit-node kinds (DESIGN.md §10)
+CK_AND = 0  # all leaves and children true (a branch conjunction)
+CK_OR = 1  # any child true (anyOf)
+CK_XOR1 = 2  # exactly one child true (oneOf)
+CK_NOT = 3  # negation of the conjunction of leaves and children (not)
 
 
 # special location ids
@@ -151,8 +183,20 @@ class _Loc:
     item_loc: int = -1
     item_start: int = 0
     prefix_locs: List[int] = field(default_factory=list)
+    # key -> acquired-bit slot.  A slot exists for every key whose presence
+    # is *observed* (hard ``required`` or conditional requiredness inside a
+    # circuit); only ``hard_keys`` enter ``loc_required_mask``.
     required_slots: Dict[str, int] = field(default_factory=dict)
+    hard_keys: Set[str] = field(default_factory=set)
     frontier: bool = False  # a label expansion ran out of budget here
+    # instantiated at most once per document (root, or reached purely via
+    # property edges) -- the soundness precondition for circuit owners
+    unique: bool = True
+    # property-routing scopes, enforced at build() time (exempt keys keep
+    # their route; other keys snap to LOC_INVALID under a closed object,
+    # or must re-route to / raise against an additionalProperties scope)
+    closed_exempt: Optional[Set[str]] = None
+    addl_exempt: Optional[Set[str]] = None
 
 
 @dataclass
@@ -240,6 +284,18 @@ class LocationTape:
     # bool array is kept for introspection, linking and static skips.
     loc_frontier: Optional[np.ndarray] = None  # bool (L,)
     unroll_depth: int = 0  # budget used at build time (0: no labels)
+    # -- logical-applicator circuits (DESIGN.md §10) --------------------
+    # ``asrt_circ[a]`` wires assertion row ``a`` to a circuit node as a
+    # leaf (-1: plain row).  Circuit nodes are stored parents-first
+    # (``circ_parent[c] < c`` for non-roots); ``circ_level`` is the
+    # bottom-up evaluation level (leaf-only nodes at level 0), bounded by
+    # the compile-time ``max_circ_depth``.
+    asrt_circ: Optional[np.ndarray] = None  # int32 (A,)
+    circ_kind: Optional[np.ndarray] = None  # int32 (C,)  CK_* codes
+    circ_parent: Optional[np.ndarray] = None  # int32 (C,)  -1 = root
+    circ_owner: Optional[np.ndarray] = None  # int32 (C,)  owner location
+    circ_level: Optional[np.ndarray] = None  # int32 (C,)
+    max_circ_depth: int = 0
 
     def __post_init__(self) -> None:
         if self.psort_member is None:
@@ -257,6 +313,16 @@ class LocationTape:
             self.max_member_props = int(self.member_prop_len.max()) if len(self.member_prop_len) else 0
         if self.loc_frontier is None:
             self.loc_frontier = np.zeros(len(self.loc_closed), bool)
+        if self.asrt_circ is None:
+            self.asrt_circ = np.full(len(self.asrt_owner), -1, np.int32)
+        if self.circ_kind is None:
+            self.circ_kind = np.zeros(0, np.int32)
+        if self.circ_parent is None:
+            self.circ_parent = np.zeros(0, np.int32)
+        if self.circ_owner is None:
+            self.circ_owner = np.zeros(0, np.int32)
+        if self.circ_level is None:
+            self.circ_level = np.zeros(0, np.int32)
 
     @property
     def n_props(self) -> int:
@@ -273,6 +339,10 @@ class LocationTape:
     @property
     def n_frontier(self) -> int:
         return int(np.count_nonzero(self.loc_frontier))
+
+    @property
+    def n_circuits(self) -> int:
+        return len(self.circ_kind)
 
 
 class _TapeBuilder:
@@ -294,6 +364,54 @@ class _TapeBuilder:
         # the cycle detector.  A label already on the stack more than
         # ``unroll_depth`` times stops expanding and marks a frontier.
         self._label_stack: Dict[int, int] = {}
+        # logical-applicator circuit nodes (DESIGN.md §10); rows emitted
+        # while ``_circ_ctx >= 0`` become leaves of that circuit node
+        self.circ_kind: List[int] = []
+        self.circ_parent: List[int] = []
+        self.circ_owner: List[int] = []
+        self._circ_ctx: int = -1
+
+    # -- circuits (DESIGN.md §10) --------------------------------------
+
+    def new_circ(self, kind: int, loc: _Loc, parent: Optional[int] = None) -> int:
+        cid = len(self.circ_kind)
+        self.circ_kind.append(kind)
+        self.circ_parent.append(self._circ_ctx if parent is None else parent)
+        self.circ_owner.append(loc.index)
+        return cid
+
+    def circuit_group(self, instructions: Instructions, loc: _Loc, node: int) -> None:
+        """Lower ``instructions`` at ``loc`` as inputs of circuit ``node``."""
+        prev = self._circ_ctx
+        self._circ_ctx = node
+        try:
+            self.add_group(instructions, loc)
+        finally:
+            self._circ_ctx = prev
+
+    def check_circuit_site(self, loc: _Loc, kw: str) -> None:
+        if not loc.unique:
+            raise UnsupportedForBatch(
+                f"{kw} under items/prefixItems/additionalProperties not "
+                "batchable (owner location is not a unique instance path)"
+            )
+
+    def lower_condition(
+        self,
+        loc: _Loc,
+        condition: Instructions,
+        then_children: Instructions,
+        else_children: Instructions,
+    ) -> None:
+        """``if c then t else e`` == OR(AND(c, t), AND(NOT(c), e))."""
+        node = self.new_circ(CK_OR, loc)
+        then_branch = self.new_circ(CK_AND, loc, parent=node)
+        self.circuit_group(condition, loc, then_branch)
+        self.circuit_group(then_children, loc, then_branch)
+        else_branch = self.new_circ(CK_AND, loc, parent=node)
+        negated = self.new_circ(CK_NOT, loc, parent=else_branch)
+        self.circuit_group(condition, loc, negated)
+        self.circuit_group(else_children, loc, else_branch)
 
     # -- label unrolling (DESIGN.md §9) --------------------------------
 
@@ -322,8 +440,8 @@ class _TapeBuilder:
 
     # -- locations -----------------------------------------------------
 
-    def new_loc(self) -> _Loc:
-        loc = _Loc(index=len(self.locs))
+    def new_loc(self, *, unique: bool = True) -> _Loc:
+        loc = _Loc(index=len(self.locs), unique=unique)
         self.locs.append(loc)
         return loc
 
@@ -334,21 +452,29 @@ class _TapeBuilder:
             if child_idx >= 0:
                 return self.locs[child_idx]
             # upgrade an untracked (required-only) row to a real location
-            child = self.new_loc()
+            child = self.new_loc(unique=loc.unique)
             owner, lanes, _, slot = self.prop_rows[row]
             self.prop_rows[row] = (owner, lanes, child.index, slot)
             return child
         from ..data.doc_table import key_lanes
 
-        child = self.new_loc()
+        child = self.new_loc(unique=loc.unique)
         row = len(self.prop_rows)
         self.prop_rows.append((loc.index, key_lanes(key), child.index, -1))
         loc.props[key] = row
         return child
 
-    def require_key(self, loc: _Loc, key: str) -> None:
+    def require_key(self, loc: _Loc, key: str, *, hard: bool = True) -> int:
+        """Allocate (or look up) the key's acquired-bit slot.
+
+        ``hard`` marks the key unconditionally required (it enters
+        ``loc_required_mask``); conditional requiredness inside circuits
+        only needs the slot so :data:`AOP.OBJ_HAS_SLOT` can observe it.
+        """
+        if hard:
+            loc.hard_keys.add(key)
         if key in loc.required_slots:
-            return
+            return loc.required_slots[key]
         slot = len(loc.required_slots)
         if slot >= 32:
             raise UnsupportedForBatch(">32 required properties at one location")
@@ -363,6 +489,7 @@ class _TapeBuilder:
             row = len(self.prop_rows)
             self.prop_rows.append((loc.index, key_lanes(key), LOC_UNTRACKED, slot))
             loc.props[key] = row
+        return slot
 
     # -- assertion rows ---------------------------------------------------
 
@@ -372,6 +499,7 @@ class _TapeBuilder:
                 owner=loc.index,
                 op=op,
                 group=group,
+                circ=self._circ_ctx,
                 f0=float(f0),
                 i0=int(i0),
                 i1=int(i1),
@@ -401,6 +529,10 @@ class _TapeBuilder:
     def add(self, inst: Instruction, loc: _Loc) -> None:
         target = self.descend(loc, inst.rel_path)
         op = inst.op
+        if self._circ_ctx >= 0 and op not in _CIRCUIT_OPS:
+            raise UnsupportedForBatch(
+                f"instruction {op.name} inside a logical applicator not batchable"
+            )
         handler = _HANDLERS.get(op)
         if handler is None:
             raise UnsupportedForBatch(f"instruction {op.name} not batchable")
@@ -408,8 +540,64 @@ class _TapeBuilder:
 
     # -- finalize ------------------------------------------------------------
 
+    def _note_closed(self, loc: _Loc, keys) -> None:
+        ks = set(keys)
+        loc.closed_exempt = ks if loc.closed_exempt is None else (loc.closed_exempt & ks)
+        loc.closed = True
+
+    def _note_addl_exempt(self, loc: _Loc, keys) -> None:
+        ks = set(keys)
+        loc.addl_exempt = ks if loc.addl_exempt is None else (loc.addl_exempt & ks)
+
+    def _enforce_property_scopes(self) -> None:
+        """Reconcile per-key routes with closed/additionalProperties scopes.
+
+        A property row routes its key *away* from the location's unmatched
+        rule, which is only sound for the keys the enclosing scope exempts
+        (the adjacent ``properties``).  Rows that merely *observe* a key
+        (required-only, ``LOC_UNTRACKED`` child) re-route to the scope's
+        own rule: ``LOC_INVALID`` under a closed object (the key's very
+        presence fails), the additionalProperties location otherwise.
+        Rows with real child constraints under an additionalProperties
+        scope would need the key validated against BOTH locations --
+        inexpressible on the tape, so they fall back.  Runs before the
+        frontier snap / depth DP: it is pure route rewriting.
+        """
+        for loc in self.locs:
+            if loc.closed:
+                exempt = loc.closed_exempt or set()
+                for key, row in loc.props.items():
+                    if key in exempt:
+                        # a coexisting additionalProperties SCHEMA (e.g.
+                        # allOf of a closed object and an addl scope)
+                        # must also validate this key unless it exempts
+                        # it too -- dual routing, inexpressible
+                        if loc.addl_exempt is not None and key not in loc.addl_exempt:
+                            raise UnsupportedForBatch(
+                                f"property {key!r} is tolerated by a closed object "
+                                "but also falls under an additionalProperties "
+                                "schema (dual routing not batchable)"
+                            )
+                        continue
+                    owner, lanes, _child, slot = self.prop_rows[row]
+                    self.prop_rows[row] = (owner, lanes, LOC_INVALID, slot)
+            elif loc.addl_loc >= 0 and loc.addl_exempt is not None:
+                for key, row in loc.props.items():
+                    if key in loc.addl_exempt:
+                        continue
+                    owner, lanes, child, slot = self.prop_rows[row]
+                    if child == LOC_UNTRACKED:
+                        self.prop_rows[row] = (owner, lanes, loc.addl_loc, slot)
+                    elif child != loc.addl_loc:
+                        raise UnsupportedForBatch(
+                            f"property {key!r} has its own constraints while an "
+                            "additionalProperties scope also applies to it "
+                            "(dual routing not batchable)"
+                        )
+
     def build(self) -> LocationTape:
         L = len(self.locs)
+        self._enforce_property_scopes()
         # frontier locations (unroll budget exhausted): every transition
         # edge INTO one is snapped to the LOC_FRONTIER sentinel, so the
         # executor's ordinary negative-location propagation carries the
@@ -503,6 +691,15 @@ class _TapeBuilder:
             loc_asrt_start = np.zeros(max(1, L), np.int32)
             max_rows_per_loc = 0
 
+        # circuit-node levels, bottom-up (a child always has a larger id
+        # than its parent, so one descending pass finalizes every level)
+        C = len(self.circ_kind)
+        circ_level = np.zeros(C, np.int32)
+        for c in range(C - 1, -1, -1):
+            p = self.circ_parent[c]
+            if p >= 0 and circ_level[p] <= circ_level[c]:
+                circ_level[p] = circ_level[c] + 1
+
         tape = LocationTape(
             n_locations=L,
             max_loc_depth=max_loc_depth,
@@ -533,7 +730,7 @@ class _TapeBuilder:
             prefix_loc=np.array(prefix_loc or [-1], np.int32),
             loc_required_mask=np.array(
                 [
-                    sum(1 << s for s in l.required_slots.values())
+                    sum(1 << l.required_slots[k] for k in l.hard_keys)
                     for l in self.locs
                 ]
                 or [0],
@@ -548,6 +745,12 @@ class _TapeBuilder:
             asrt_u0=np.array([r["u0"] for r in asrt_rows] or [0], np.uint32),
             asrt_u1=np.array([r["u1"] for r in asrt_rows] or [0], np.uint32),
             asrt_hash=np.stack([r["lanes"] for r in asrt_rows] or [np.zeros(8, np.uint32)]),
+            asrt_circ=np.array([r["circ"] for r in asrt_rows] or [-1], np.int32),
+            circ_kind=np.asarray(self.circ_kind, dtype=np.int32),
+            circ_parent=np.asarray(self.circ_parent, dtype=np.int32),
+            circ_owner=np.asarray(self.circ_owner, dtype=np.int32),
+            circ_level=circ_level,
+            max_circ_depth=int(circ_level.max()) if C else 0,
             loc_frontier=frontier_mask,
             unroll_depth=self.unroll_depth if self.labels else 0,
         )
@@ -695,22 +898,36 @@ def _h_object_size(b, inst, loc):
         b.row(loc, AOP.OBJ_MAXPROPS, i0=inst.bound)
 
 
+def _require_row(b, loc, key):
+    """Lower one requiredness fact: a hard required-slot bit outside
+    circuits, an :data:`AOP.OBJ_HAS_SLOT` leaf row inside them."""
+    if b._circ_ctx >= 0:
+        slot = b.require_key(loc, key, hard=False)
+        b.row(loc, AOP.OBJ_HAS_SLOT, i0=slot)
+    else:
+        b.require_key(loc, key)
+
+
 def _h_defines(b, inst, loc):
-    b.require_key(loc, inst.key)
+    _require_row(b, loc, inst.key)
 
 
 def _h_defines_all(b, inst, loc):
     for key in inst.keys:
-        b.require_key(loc, key)
+        _require_row(b, loc, key)
 
 
 def _h_property_type(b, inst, loc):
-    b.require_key(loc, inst.key)
+    _require_row(b, loc, inst.key)
     child = b.child_for_key(loc, inst.key)
     _type_row(b, child, (inst.type,))
 
 
 def _h_loop_properties_match(b, inst, loc, closed=False):
+    if closed and b._circ_ctx >= 0:
+        raise UnsupportedForBatch(
+            "additionalProperties: false inside a logical applicator not batchable"
+        )
     if closed and getattr(inst, "tolerate_patterns", ()):  # patterns need key text
         for p in inst.tolerate_patterns:
             raise UnsupportedForBatch("patternProperties tolerance not batchable")
@@ -718,7 +935,7 @@ def _h_loop_properties_match(b, inst, loc, closed=False):
         child = b.child_for_key(loc, key)
         b.add_group(group, child)
     if closed:
-        loc.closed = True
+        b._note_closed(loc, (key for key, _h, _grp in inst.matches))
 
 
 def _h_loop_properties_match_closed(b, inst, loc):
@@ -730,8 +947,11 @@ def _h_loop_properties(b, inst, loc):
     if loc.addl_loc >= 0:
         addl = b.locs[loc.addl_loc]
     else:
-        addl = b.new_loc()
+        addl = b.new_loc(unique=False)
         loc.addl_loc = addl.index
+    # no key is exempt from this scope: every property row at this
+    # location must reconcile with it (enforced at build())
+    b._note_addl_exempt(loc, ())
     b.add_group(inst.children, addl)
 
 
@@ -741,10 +961,11 @@ def _h_loop_properties_except(b, inst, loc):
     # excluded keys must exist as prop rows so unmatched -> addl
     for key in inst.exclude_keys:
         b.child_for_key(loc, key)
-    addl = b.new_loc()
+    addl = b.new_loc(unique=False)
     if loc.addl_loc >= 0:
         raise UnsupportedForBatch("multiple additionalProperties scopes")
     loc.addl_loc = addl.index
+    b._note_addl_exempt(loc, inst.exclude_keys)
     b.add_group(inst.children, addl)
 
 
@@ -752,7 +973,7 @@ def _h_loop_items(b, inst, loc):
     if loc.item_loc >= 0:
         item = b.locs[loc.item_loc]
     else:
-        item = b.new_loc()
+        item = b.new_loc(unique=False)
         loc.item_loc = item.index
         loc.item_start = 0
     b.add_group(inst.children, item)
@@ -761,7 +982,7 @@ def _h_loop_items(b, inst, loc):
 def _h_loop_items_from(b, inst, loc):
     if loc.item_loc >= 0:
         raise UnsupportedForBatch("conflicting items scopes")
-    item = b.new_loc()
+    item = b.new_loc(unique=False)
     loc.item_loc = item.index
     loc.item_start = inst.start
     b.add_group(inst.children, item)
@@ -771,7 +992,7 @@ def _h_array_prefix(b, inst, loc):
     if loc.prefix_locs:
         raise UnsupportedForBatch("conflicting prefixItems scopes")
     for group in inst.groups:
-        child = b.new_loc()
+        child = b.new_loc(unique=False)
         loc.prefix_locs.append(child.index)
         b.add_group(group, child)
 
@@ -785,6 +1006,86 @@ def _h_control_label(b, inst, loc):
 
 def _h_control_jump(b, inst, loc):
     b.expand_label(inst.label, loc)
+
+
+# -- logical applicators -> circuit nodes (DESIGN.md §10) -------------------
+
+
+def _h_logical_and(b, inst, loc):
+    # allOf == splice: same conjunction context, no new node needed
+    b.add_group(inst.children, loc)
+
+
+def _h_logical_or(b, inst, loc):
+    b.check_circuit_site(loc, "anyOf")
+    node = b.new_circ(CK_OR, loc)
+    for group in inst.groups:
+        branch = b.new_circ(CK_AND, loc, parent=node)
+        b.circuit_group(group, loc, branch)
+
+
+def _h_logical_xor(b, inst, loc):
+    b.check_circuit_site(loc, "oneOf")
+    node = b.new_circ(CK_XOR1, loc)
+    for group in inst.groups:
+        branch = b.new_circ(CK_AND, loc, parent=node)
+        b.circuit_group(group, loc, branch)
+
+
+def _h_logical_not(b, inst, loc):
+    b.check_circuit_site(loc, "not")
+    node = b.new_circ(CK_NOT, loc)
+    b.circuit_group(inst.children, loc, node)
+
+
+def _h_logical_condition(b, inst, loc):
+    b.check_circuit_site(loc, "if")
+    b.lower_condition(loc, inst.condition, inst.then_children, inst.else_children)
+
+
+def _h_when_type(b, inst, loc):
+    from .instructions import AssertionType
+
+    b.check_circuit_site(loc, "if")
+    b.lower_condition(loc, (AssertionType(type=inst.type),), inst.children, ())
+
+
+def _h_when_defines(b, inst, loc):
+    from .instructions import AssertionDefines, AssertionType
+
+    b.check_circuit_site(loc, "dependentSchemas")
+    condition = (
+        AssertionType(type="object"),
+        AssertionDefines(key=inst.key, key_hash=inst.key_hash),
+    )
+    b.lower_condition(loc, condition, inst.children, ())
+
+
+def _h_when_array_size_greater(b, inst, loc):
+    from .instructions import AssertionArraySizeGreater, AssertionType
+
+    b.check_circuit_site(loc, "if")
+    condition = (
+        AssertionType(type="array"),
+        AssertionArraySizeGreater(bound=inst.bound + 1),
+    )
+    b.lower_condition(loc, condition, inst.children, ())
+
+
+def _h_when_array_size_equal(b, inst, loc):
+    from .instructions import (
+        AssertionArraySizeGreater,
+        AssertionArraySizeLess,
+        AssertionType,
+    )
+
+    b.check_circuit_site(loc, "if")
+    condition = (
+        AssertionType(type="array"),
+        AssertionArraySizeGreater(bound=inst.bound),
+        AssertionArraySizeLess(bound=inst.bound),
+    )
+    b.lower_condition(loc, condition, inst.children, ())
 
 
 _HANDLERS = {
@@ -820,7 +1121,63 @@ _HANDLERS = {
     OpCode.ARRAY_PREFIX: _h_array_prefix,
     OpCode.CONTROL_LABEL: _h_control_label,
     OpCode.CONTROL_JUMP: _h_control_jump,
+    OpCode.AND: _h_logical_and,
+    OpCode.OR: _h_logical_or,
+    OpCode.XOR: _h_logical_xor,
+    OpCode.NOT: _h_logical_not,
+    OpCode.CONDITION: _h_logical_condition,
+    OpCode.WHEN_TYPE: _h_when_type,
+    OpCode.WHEN_DEFINES: _h_when_defines,
+    OpCode.WHEN_ARRAY_SIZE_GREATER: _h_when_array_size_greater,
+    OpCode.WHEN_ARRAY_SIZE_EQUAL: _h_when_array_size_equal,
 }
+
+# instructions lowerable INSIDE a circuit branch: scalar assertion rows
+# (possibly at property-descended child locations), conditional
+# requiredness, per-key property groups, and nested logical applicators.
+# Anything else (item loops, additionalProperties scopes, $ref labels,
+# propertyNames, contains, uniqueItems, ...) raises with a precise reason
+# so `fallback_reasons()` can name the offending construct.
+_CIRCUIT_OPS = frozenset(
+    {
+        OpCode.FAIL,
+        OpCode.TYPE,
+        OpCode.TYPE_ANY,
+        OpCode.EQUAL,
+        OpCode.EQUALS_ANY,
+        OpCode.GREATER,
+        OpCode.GREATER_EQUAL,
+        OpCode.LESS,
+        OpCode.LESS_EQUAL,
+        OpCode.NUMBER_BOUNDS,
+        OpCode.DIVISIBLE,
+        OpCode.STRING_SIZE_GREATER,
+        OpCode.STRING_SIZE_LESS,
+        OpCode.STRING_BOUNDS,
+        OpCode.REGEX,
+        OpCode.ARRAY_SIZE_GREATER,
+        OpCode.ARRAY_SIZE_LESS,
+        OpCode.ARRAY_BOUNDS,
+        OpCode.OBJECT_SIZE_GREATER,
+        OpCode.OBJECT_SIZE_LESS,
+        OpCode.DEFINES,
+        OpCode.DEFINES_ALL,
+        OpCode.PROPERTY_TYPE,
+        OpCode.LOOP_PROPERTIES_MATCH,
+        # handler raises its own precise "additionalProperties: false
+        # inside a logical applicator" reason
+        OpCode.LOOP_PROPERTIES_MATCH_CLOSED,
+        OpCode.AND,
+        OpCode.OR,
+        OpCode.XOR,
+        OpCode.NOT,
+        OpCode.CONDITION,
+        OpCode.WHEN_TYPE,
+        OpCode.WHEN_DEFINES,
+        OpCode.WHEN_ARRAY_SIZE_GREATER,
+        OpCode.WHEN_ARRAY_SIZE_EQUAL,
+    }
+)
 
 
 def build_tape(

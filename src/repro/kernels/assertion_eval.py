@@ -47,12 +47,14 @@ BLOCK_A = 256
 WINDOW_ALIGN = 8
 
 
-def _eval_rows(ntype, isint, num, size, pfx0, pfx1, op, f0, i0, i1, u0, u1, hash_eq, out_shape):
+def _eval_rows(ntype, isint, num, size, acq, pfx0, pfx1, op, f0, i0, i1, u0, u1, hash_eq, out_shape):
     """Branch-free mini-ISA evaluation shared by both kernel layouts.
 
     Node operands are (BN, 1); assertion operands are either (1, BA)
     (dense) or (BN, W) (windowed); ``hash_eq`` is the 8-lane string-hash
-    equality matrix already broadcast to ``out_shape``.  All 17 candidate
+    equality matrix already broadcast to ``out_shape``.  ``acq`` is the
+    node's acquired required-slot bitmask (the executor's location
+    propagation computes it; OBJ_HAS_SLOT reads one bit).  All candidate
     results are computed unconditionally and combined with a select chain
     on the op code -- the VPU is wide enough that computing all candidates
     costs less than divergent control flow would.
@@ -114,6 +116,11 @@ def _eval_rows(ntype, isint, num, size, pfx0, pfx1, op, f0, i0, i1, u0, u1, hash
     r_bool = jnp.logical_and(is_bool, num == f0)
     r_num_const = jnp.logical_and(is_num, num == f0)
 
+    # OBJ_HAS_SLOT: the object defines the property wired to slot i0
+    # (precondition semantics: non-objects pass)
+    slot_bit = (jnp.right_shift(acq, jnp.minimum(jnp.maximum(i0, 0), 31)) & 1) != 0
+    r_has_slot = jnp.logical_or(~is_obj, slot_bit)
+
     candidates = [
         (AOP.TYPE_MASK, r_type),
         (AOP.NUM_GE, r_ge),
@@ -133,6 +140,7 @@ def _eval_rows(ntype, isint, num, size, pfx0, pfx1, op, f0, i0, i1, u0, u1, hash
         (AOP.CONST_BOOL, r_bool),
         (AOP.CONST_NUM, r_num_const),
         (AOP.STR_EQ_PRE, r_str_eq_pre),
+        (AOP.OBJ_HAS_SLOT, r_has_slot),
     ]
     result = jnp.zeros(out_shape, jnp.bool_)
     for code, value in candidates:
@@ -151,6 +159,7 @@ def _assertion_kernel(
     n_isint_ref,
     n_num_ref,
     n_size_ref,
+    n_acq_ref,
     n_strhash_ref,  # (BN, 8) uint32
     n_strpfx_ref,  # (BN, 2) uint32
     # assertion columns, (BA, 1) each unless noted
@@ -167,6 +176,7 @@ def _assertion_kernel(
     isint = n_isint_ref[...] != 0
     num = n_num_ref[...]
     size = n_size_ref[...]
+    acq = n_acq_ref[...]
     pfx0 = n_strpfx_ref[:, 0].reshape(-1, 1)
     pfx1 = n_strpfx_ref[:, 1].reshape(-1, 1)
 
@@ -185,7 +195,7 @@ def _assertion_kernel(
         hash_eq = jnp.logical_and(hash_eq, nh == ah)
 
     result = _eval_rows(
-        ntype, isint, num, size, pfx0, pfx1, op, f0, i0, i1, u0, u1, hash_eq, out_ref.shape
+        ntype, isint, num, size, acq, pfx0, pfx1, op, f0, i0, i1, u0, u1, hash_eq, out_ref.shape
     )
     out_ref[...] = result.astype(jnp.int8)
 
@@ -200,7 +210,8 @@ def assertion_eval_pallas(
 ) -> jax.Array:
     """Returns (N, A) int8 pass matrix.  Caller pads to block multiples.
 
-    node_cols: type/is_int/num/size (N,), str_hash (N,8), str_prefix (N,2)
+    node_cols: type/is_int/num/size/acquired (N,), str_hash (N,8),
+    str_prefix (N,2)
     asrt_cols: op/f0/i0/i1/u0/u1 (A,), hash (A,8)
     """
     n = node_cols["type"].shape[0]
@@ -217,6 +228,7 @@ def assertion_eval_pallas(
         _assertion_kernel,
         grid=grid,
         in_specs=[
+            n_spec,
             n_spec,
             n_spec,
             n_spec,
@@ -239,6 +251,7 @@ def assertion_eval_pallas(
         col2d(node_cols["is_int"].astype(jnp.int32)),
         col2d(node_cols["num"]),
         col2d(node_cols["size"].astype(jnp.int32)),
+        col2d(node_cols["acquired"].astype(jnp.int32)),
         node_cols["str_hash"],
         node_cols["str_prefix"],
         col2d(asrt_cols["op"].astype(jnp.int32)),
@@ -263,6 +276,7 @@ def _assertion_window_kernel(
     n_isint_ref,
     n_num_ref,
     n_size_ref,
+    n_acq_ref,
     n_strhash_ref,  # (BN, 8) uint32
     n_strpfx_ref,  # (BN, 2) uint32
     # per-node windowed assertion operands, (BN, W) each unless noted
@@ -281,6 +295,7 @@ def _assertion_window_kernel(
     isint = n_isint_ref[...] != 0
     num = n_num_ref[...]
     size = n_size_ref[...]
+    acq = n_acq_ref[...]
     pfx0 = n_strpfx_ref[:, 0].reshape(-1, 1)
     pfx1 = n_strpfx_ref[:, 1].reshape(-1, 1)
 
@@ -299,7 +314,7 @@ def _assertion_window_kernel(
         hash_eq = jnp.logical_and(hash_eq, nh == ah)
 
     result = _eval_rows(
-        ntype, isint, num, size, pfx0, pfx1, op, f0, i0, i1, u0, u1, hash_eq, out_ref.shape
+        ntype, isint, num, size, acq, pfx0, pfx1, op, f0, i0, i1, u0, u1, hash_eq, out_ref.shape
     )
     out_ref[...] = result.astype(jnp.int8)
 
@@ -313,7 +328,8 @@ def assertion_eval_window_pallas(
 ) -> jax.Array:
     """Returns (N, W) int8 pass matrix for pre-gathered CSR windows.
 
-    node_cols: type/is_int/num/size (N,), str_hash (N,8), str_prefix (N,2)
+    node_cols: type/is_int/num/size/acquired (N,), str_hash (N,8),
+    str_prefix (N,2)
     w_cols: op/f0/i0/i1/u0/u1 (N, W), hash (N, W, 8).  Masked window slots
     must carry op=-1 (evaluate to 0).  Caller pads N to a block multiple
     and W to a sublane multiple.
@@ -339,6 +355,7 @@ def assertion_eval_window_pallas(
             n_spec,
             n_spec,
             n_spec,
+            n_spec,
             pl.BlockSpec((block_n, 8), lambda i: (i, 0)),
             pl.BlockSpec((block_n, 2), lambda i: (i, 0)),
             w_spec,
@@ -357,6 +374,7 @@ def assertion_eval_window_pallas(
         col2d(node_cols["is_int"].astype(jnp.int32)),
         col2d(node_cols["num"]),
         col2d(node_cols["size"].astype(jnp.int32)),
+        col2d(node_cols["acquired"].astype(jnp.int32)),
         node_cols["str_hash"],
         node_cols["str_prefix"],
         w_cols["op"].astype(jnp.int32),

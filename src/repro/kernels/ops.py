@@ -37,6 +37,20 @@ def _round_up(n: int, block: int) -> int:
     return max(block, ((n + block - 1) // block) * block)
 
 
+def _with_acquired(node_cols: dict) -> dict:
+    """Default the acquired-slot bitmask to zeros for callers without one.
+
+    OBJ_HAS_SLOT rows only appear on tapes with logical-applicator
+    circuits; plain callers (kernel tests, dense baselines over
+    circuit-free tapes) need not thread the column through.
+    """
+    if "acquired" in node_cols:
+        return node_cols
+    out = dict(node_cols)
+    out["acquired"] = jnp.zeros_like(node_cols["size"])
+    return out
+
+
 @functools.partial(
     jax.jit, static_argnames=("block_n", "block_m", "use_pallas", "interpret")
 )
@@ -83,6 +97,7 @@ def assertion_eval(
     interpret: bool | None = None,
 ) -> jax.Array:
     """(N, A) int8 pass matrix (see assertion_eval.py)."""
+    node_cols = _with_acquired(node_cols)
     if not use_pallas:
         return _ref.assertion_eval_ref(node_cols, asrt_cols)
     interpret = _interpret_default() if interpret is None else interpret
@@ -116,6 +131,7 @@ def assertion_eval_window(
     ``w_cols`` holds per-node windowed operands (op/f0/i0/i1/u0/u1 of
     shape (N, W), hash of shape (N, W, 8)); masked slots must carry op=-1.
     """
+    node_cols = _with_acquired(node_cols)
     if not use_pallas:
         return _ref.assertion_eval_window_ref(node_cols, w_cols)
     interpret = _interpret_default() if interpret is None else interpret

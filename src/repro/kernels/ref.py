@@ -31,11 +31,12 @@ def hash_match_ref(
     return jnp.where(best >= big, jnp.int32(-1), best)
 
 
-def _eval_rows_ref(ntype, isint, num, size, str_pfx0, str_pfx1, op, f0, i0, i1, u0, u1, hash_eq):
+def _eval_rows_ref(ntype, isint, num, size, acq, str_pfx0, str_pfx1, op, f0, i0, i1, u0, u1, hash_eq):
     """Mini-ISA row evaluation on already-broadcastable operands.
 
     ``hash_eq`` carries the 8-lane string-hash equality at the output
-    shape; node operands are (N, 1), assertion operands (1, A) or (N, W).
+    shape; node operands are (N, 1) (``acq`` is the acquired required-slot
+    bitmask), assertion operands (1, A) or (N, W).
     """
     out_shape = hash_eq.shape
 
@@ -89,6 +90,10 @@ def _eval_rows_ref(ntype, isint, num, size, str_pfx0, str_pfx1, op, f0, i0, i1, 
     r_bool = (ntype == _T_BOOL) & (num == f0)
     r_num_const = is_num & (num == f0)
 
+    # OBJ_HAS_SLOT: acquired required-slot bit i0 (non-objects pass)
+    slot_bit = (jnp.right_shift(acq, jnp.clip(i0, 0, 31)) & 1) != 0
+    r_has_slot = ~is_obj | slot_bit
+
     result = jnp.zeros(out_shape, bool)
     for code, value in [
         (AOP.TYPE_MASK, r_type),
@@ -109,6 +114,7 @@ def _eval_rows_ref(ntype, isint, num, size, str_pfx0, str_pfx1, op, f0, i0, i1, 
         (AOP.CONST_BOOL, r_bool),
         (AOP.CONST_NUM, r_num_const),
         (AOP.STR_EQ_PRE, r_str_eq_pre),
+        (AOP.OBJ_HAS_SLOT, r_has_slot),
     ]:
         result = jnp.where(op == code, jnp.broadcast_to(value, out_shape), result)
     return result
@@ -120,6 +126,7 @@ def assertion_eval_ref(node_cols: dict, asrt_cols: dict) -> jax.Array:
     isint = node_cols["is_int"].astype(bool)[:, None]
     num = node_cols["num"][:, None]
     size = node_cols["size"].astype(jnp.int32)[:, None]
+    acq = node_cols["acquired"].astype(jnp.int32)[:, None]
     str_hash = node_cols["str_hash"]  # (N, 8)
     str_pfx = node_cols["str_prefix"]  # (N, 2)
 
@@ -133,7 +140,7 @@ def assertion_eval_ref(node_cols: dict, asrt_cols: dict) -> jax.Array:
 
     hash_eq = jnp.all(str_hash[:, None, :] == a_hash[None, :, :], axis=-1)  # (N, A)
     result = _eval_rows_ref(
-        ntype, isint, num, size, str_pfx[:, 0:1], str_pfx[:, 1:2],
+        ntype, isint, num, size, acq, str_pfx[:, 0:1], str_pfx[:, 1:2],
         op, f0, i0, i1, u0, u1, hash_eq,
     )
     return result.astype(jnp.int8)
@@ -150,6 +157,7 @@ def assertion_eval_window_ref(node_cols: dict, w_cols: dict) -> jax.Array:
     isint = node_cols["is_int"].astype(bool)[:, None]
     num = node_cols["num"][:, None]
     size = node_cols["size"].astype(jnp.int32)[:, None]
+    acq = node_cols["acquired"].astype(jnp.int32)[:, None]
     str_hash = node_cols["str_hash"]  # (N, 8)
     str_pfx = node_cols["str_prefix"]  # (N, 2)
 
@@ -163,7 +171,7 @@ def assertion_eval_window_ref(node_cols: dict, w_cols: dict) -> jax.Array:
 
     hash_eq = jnp.all(str_hash[:, None, :] == w_hash, axis=-1)  # (N, W)
     result = _eval_rows_ref(
-        ntype, isint, num, size, str_pfx[:, 0:1], str_pfx[:, 1:2],
+        ntype, isint, num, size, acq, str_pfx[:, 0:1], str_pfx[:, 1:2],
         op, f0, i0, i1, u0, u1, hash_eq,
     )
     return result.astype(jnp.int8)

@@ -24,6 +24,13 @@ Relocation scheme (DESIGN.md §8):
   row offset, ``loc_asrt_len`` is untouched.
 - **enum OR-group ids** shift by the running maximum so they stay
   globally unique (the dense layout reduces groups globally).
+- **circuit nodes** (logical applicators, DESIGN.md §10) concatenate in
+  member order: ``circ_parent`` and ``asrt_circ`` shift by the member's
+  circuit offset (-1 sentinels preserved), ``circ_owner`` by its
+  location offset, ``circ_level`` is untouched and ``max_circ_depth``
+  recomputes as the member maximum.  Presence gating makes members'
+  circuits no-ops for documents of other members (their owner locations
+  are never instantiated), so no per-member masking is needed.
 - the **hash-sorted property view** (``psort_*``) concatenates per-member
   sorted segments (``member_prop_start``/``member_prop_len``, each row
   tagged ``psort_member`` for introspection).  The executor's hash pass
@@ -74,6 +81,8 @@ class LinkedTape(LocationTape):
     # non-recursive members)
     member_unroll_depths: Optional[np.ndarray] = None  # int32 (S,)
     member_n_frontier: Optional[np.ndarray] = None  # int32 (S,)
+    # per-member circuit-node counts (logical applicators)
+    member_n_circuits: Optional[np.ndarray] = None  # int32 (S,)
 
     def member_of_location(self, loc: int) -> int:
         """Member index owning global location id ``loc``."""
@@ -132,6 +141,17 @@ class TapeSegment:
     # $ref-unroll facts (frontier locations mark exhausted budgets)
     loc_frontier: np.ndarray
     unroll_depth: int
+    # logical-applicator circuits (real rows carry relocatable ids)
+    asrt_circ: np.ndarray
+    circ_kind: np.ndarray
+    circ_parent: np.ndarray
+    circ_owner: np.ndarray
+    circ_level: np.ndarray
+    max_circ_depth: int
+
+    @property
+    def n_circuits(self) -> int:
+        return len(self.circ_kind)
 
     @property
     def n_props(self) -> int:
@@ -192,6 +212,12 @@ def segment_tape(tape: LocationTape) -> TapeSegment:
         max_group=int(tape.asrt_group.max()) if len(tape.asrt_group) else 0,
         loc_frontier=tape.loc_frontier,
         unroll_depth=tape.unroll_depth,
+        asrt_circ=tape.asrt_circ[real_a],
+        circ_kind=tape.circ_kind,
+        circ_parent=tape.circ_parent,
+        circ_owner=tape.circ_owner,
+        circ_level=tape.circ_level,
+        max_circ_depth=tape.max_circ_depth,
     )
 
 
@@ -254,6 +280,21 @@ def link_tapes(
         [np.where(s.asrt_group > 0, s.asrt_group + go, 0) for s, go in zip(segments, grp_off)]
     ).astype(np.int32)
 
+    # circuit nodes concatenate; leaf wiring and parent pointers shift by
+    # the member's circuit offset, owners by its location offset
+    circ_off = _exclusive_cumsum([s.n_circuits for s in segments])
+    asrt_circ = cat(
+        [_reloc(s.asrt_circ, co) for s, co in zip(segments, circ_off)]
+    ).astype(np.int32)
+    circ_kind = cat([s.circ_kind for s in segments]).astype(np.int32)
+    circ_parent = cat(
+        [_reloc(s.circ_parent, co) for s, co in zip(segments, circ_off)]
+    ).astype(np.int32)
+    circ_owner = cat(
+        [s.circ_owner + lo for s, lo in zip(segments, loc_off)]
+    ).astype(np.int32)
+    circ_level = cat([s.circ_level for s in segments]).astype(np.int32)
+
     linked = dict(
         n_locations=int(loc_off[-1]) + segments[-1].n_locations,
         max_loc_depth=max(s.max_loc_depth for s in segments),
@@ -299,6 +340,12 @@ def link_tapes(
         # valued columns above pass through ``_reloc`` untouched)
         loc_frontier=cat([s.loc_frontier for s in segments]).astype(bool),
         unroll_depth=max(s.unroll_depth for s in segments),
+        asrt_circ=asrt_circ,
+        circ_kind=circ_kind,
+        circ_parent=circ_parent,
+        circ_owner=circ_owner,
+        circ_level=circ_level,
+        max_circ_depth=max(s.max_circ_depth for s in segments),
     )
 
     # empty-table placeholders, mirroring _TapeBuilder.build(): the
@@ -328,6 +375,7 @@ def link_tapes(
             asrt_u0=np.zeros(1, np.uint32),
             asrt_u1=np.zeros(1, np.uint32),
             asrt_hash=np.zeros((1, 8), np.uint32),
+            asrt_circ=np.full(1, -1, np.int32),
         )
     if linked["prefix_loc"].size == 0:
         linked["prefix_loc"] = np.full(1, -1, np.int32)
@@ -342,5 +390,6 @@ def link_tapes(
         member_n_frontier=np.array(
             [int(np.count_nonzero(s.loc_frontier)) for s in segments], np.int32
         ),
+        member_n_circuits=np.array([s.n_circuits for s in segments], np.int32),
         **linked,
     )

@@ -63,4 +63,44 @@ GATEWAY_SCHEMAS: Dict[str, Any] = {
             "category": {"enum": ["toxicity", "violence", "spam"]},
         },
     },
+    # tagged-union endpoint: the most common real-world API-payload shape
+    # for logical applicators -- batchable via assertion-group circuits
+    # (DESIGN.md §10), previously a guaranteed sequential fallback
+    "charge": {
+        "type": "object",
+        "required": ["amount", "method"],
+        "properties": {
+            "amount": {"type": "integer", "minimum": 1, "maximum": 10_000_00},
+            "currency": {"enum": ["usd", "eur", "gbp"]},
+            "method": {
+                "type": "object",
+                "required": ["kind"],
+                "properties": {"kind": {"enum": ["card", "bank", "wallet"]}},
+                "oneOf": [
+                    {
+                        "properties": {
+                            "kind": {"const": "card"},
+                            "number": {"type": "string", "minLength": 12, "maxLength": 19},
+                            "cvv": {"type": "string", "minLength": 3, "maxLength": 4},
+                        },
+                        "required": ["number", "cvv"],
+                    },
+                    {
+                        "properties": {
+                            "kind": {"const": "bank"},
+                            "iban": {"type": "string", "minLength": 15, "maxLength": 34},
+                        },
+                        "required": ["iban"],
+                    },
+                    {
+                        "properties": {
+                            "kind": {"const": "wallet"},
+                            "wallet_id": {"type": "string", "pattern": "^w-"},
+                        },
+                        "required": ["wallet_id"],
+                    },
+                ],
+            },
+        },
+    },
 }

@@ -75,6 +75,9 @@ class SchemaStats:
     # how many frontier locations it carries (0 = fully flat schema)
     unroll_depth: int = 0
     n_frontier: int = 0
+    # logical-applicator circuit facts (DESIGN.md §10)
+    n_circuits: int = 0
+    circ_depth: int = 0
 
 
 @dataclass
@@ -171,6 +174,8 @@ class SchemaRegistry:
             stats.horizon = tape.max_loc_depth + 1
             stats.unroll_depth = tape.unroll_depth
             stats.n_frontier = tape.n_frontier
+            stats.n_circuits = tape.n_circuits
+            stats.circ_depth = tape.max_circ_depth
         versions = self._entries.setdefault(endpoint, {})
         version = self._next_version.get(endpoint, 0) + 1
         self._next_version[endpoint] = version

@@ -172,6 +172,16 @@ CASES = [
         ([{"a": 1}, {"a": 1}], False), ([{"a": 1}, {"a": 2}], True),
         ([[1], [1]], False), ([], True),
     ]),
+    # JSON equality semantics: numbers compare cross-type (1 == 1.0) but
+    # booleans are never numbers (0 != false, 1 != true), and big integers
+    # must not collide through float coercion (2**53 vs 2**53 + 1)
+    ("uniqueItems equality coercion", s2020(uniqueItems=True), [
+        ([0, False], True), ([1, True], True), ([1, 1.0], False),
+        ([0.0, 0], False), ([2**53, 2**53 + 1], True),
+        ([2**53, float(2**53)], False),
+        ([[0], [False]], True), ([[1], [1.0]], False),
+        ([{"a": 0}, {"a": False}], True), ([{"a": 1}, {"a": 1.0}], False),
+    ]),
     ("items schema", s2020(items={"type": "integer"}), [
         ([1, 2], True), ([1, "x"], False), ([], True),
     ]),
@@ -318,6 +328,43 @@ CASES = [
     ("unevaluatedItems with contains", s2020(
         contains={"type": "integer"}, unevaluatedItems={"type": "string"}), [
         ([1, "a"], True), ([1, None], False), (["a", 1, "b"], True),
+    ]),
+    # 2020-12: contains marks matched items evaluated even with
+    # minContains: 0 (the applicator still annotates)
+    ("unevaluatedItems contains minContains zero", s2020(
+        contains={"type": "string"}, minContains=0, unevaluatedItems=False), [
+        ([], True), (["x"], True), (["x", "y"], True), ([1], False),
+        (["x", 1], False),
+    ]),
+    # contains annotations from a FAILED anyOf branch must not leak into
+    # the unevaluatedItems residue
+    ("unevaluatedItems contains in failed branch", s2020(
+        anyOf=[{"contains": {"type": "string"}, "minContains": 2},
+               {"minItems": 1}],
+        unevaluatedItems=False), [
+        (["x"], False), (["x", "y"], True), ([1], False), (["x", "y", 1], False),
+    ]),
+    # multi-passing-branch annotation union: BOTH passing anyOf branches
+    # contribute evaluated sets (no annotation-dropping short-circuit)
+    ("unevaluatedProperties anyOf multi-branch union", s2020(
+        anyOf=[{"properties": {"a": {"type": "string"}}, "required": ["a"]},
+               {"properties": {"b": {"type": "integer"}}, "required": ["b"]}],
+        unevaluatedProperties=False), [
+        ({"a": "x"}, True), ({"b": 1}, True), ({"a": "x", "b": 1}, True),
+        ({"a": "x", "c": 1}, False), ({"b": 1, "a": 2}, False),
+    ]),
+    ("unevaluatedItems anyOf multi-branch union", s2020(
+        anyOf=[{"prefixItems": [{"type": "string"}]},
+               {"prefixItems": [{"type": "integer"}, {"type": "integer"}]}],
+        unevaluatedItems=False), [
+        (["x"], True), ([1, 2], True), (["x", 2], False), ([1, 2, 3], False),
+    ]),
+    ("unevaluatedProperties oneOf branches", s2020(
+        oneOf=[{"properties": {"a": {"type": "string"}}, "required": ["a"]},
+               {"properties": {"b": {"type": "integer"}}, "required": ["b"]}],
+        unevaluatedProperties=False), [
+        ({"a": "x"}, True), ({"b": 1}, True), ({"a": "x", "b": 1}, False),
+        ({"a": "x", "c": 3}, False),
     ]),
     # ---------------- misc / interactions ----------------
     ("deeply nested", s2020(properties={"a": {"properties": {"b": {"properties": {

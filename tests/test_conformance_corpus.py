@@ -1,0 +1,33 @@
+"""Tier-1 gate for the vendored conformance corpus (scripts/conformance.py).
+
+The CI job also runs ``scripts/conformance.sh`` standalone and uploads
+the summary artifact; this test keeps the corpus inside the tier-1
+signal so a conformance regression fails the ordinary test run too.
+"""
+
+import importlib.util
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _load_runner():
+    spec = importlib.util.spec_from_file_location(
+        "conformance_runner", ROOT / "scripts" / "conformance.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_corpus_all_engines_agree():
+    runner = _load_runner()
+    summary = runner.run_corpus()
+    assert not summary["failures"], summary["failures"][:10]
+    totals = summary["totals"]
+    # the corpus must actually exercise every engine, including a real
+    # batched share (the logical applicators are batchable via circuits)
+    for engine in ("naive", "interpreter", "codegen"):
+        assert totals[engine]["passed"] >= 80 and totals[engine]["failed"] == 0
+    assert totals["batched"]["passed"] >= 40
+    assert totals["batched"]["failed"] == 0

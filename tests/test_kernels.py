@@ -109,6 +109,7 @@ def _random_nodes(rng, n):
         "is_int": jnp.asarray(rng.integers(0, 2, n).astype(np.int32)),
         "num": jnp.asarray(rng.normal(0, 10, n).astype(np.float32)),
         "size": jnp.asarray(rng.integers(0, 20, n).astype(np.int32)),
+        "acquired": jnp.asarray(rng.integers(0, 2**16, n).astype(np.int32)),
         "str_hash": jnp.asarray(
             np.stack([_POOL[i] for i in rng.integers(0, len(_POOL), n)])
         ),
@@ -118,7 +119,7 @@ def _random_nodes(rng, n):
 
 def _random_asrt(rng, a):
     return {
-        "op": jnp.asarray(rng.integers(0, 18, a).astype(np.int32)),
+        "op": jnp.asarray(rng.integers(0, 19, a).astype(np.int32)),
         "f0": jnp.asarray(rng.normal(0, 5, a).astype(np.float32)),
         "i0": jnp.asarray(rng.integers(0, 0xFF, a).astype(np.int32)),
         "i1": jnp.asarray(rng.integers(0, 2, a).astype(np.int32)),

@@ -306,8 +306,12 @@ class TestSchemaRegistry:
         assert st.k == entry.tape.max_hash_run
         assert st.horizon == entry.tape.max_loc_depth + 1
         assert st.compile_seconds >= 0 and st.instruction_count > 0
-        bad = reg.register("seq-only", {"not": {"type": "string"}})
+        # logical applicators are batchable now (circuits); uniqueItems
+        # still is not -- keep a genuinely sequential-only member here
+        bad = reg.register("seq-only", {"uniqueItems": True})
         assert not bad.stats.batchable and bad.stats.fallback_reason
+        union = reg.register("union", {"anyOf": [{"type": "string"}, {"minimum": 0}]})
+        assert union.stats.batchable and union.stats.n_circuits >= 3
 
     def test_incremental_relink_reuses_segments(self):
         reg = SchemaRegistry()
@@ -369,7 +373,7 @@ class TestSchemaRegistry:
         # jitted linked validator must survive (no recompile stall)
         reg.evict("a", version=1)  # non-serving version
         assert reg.batch_validator() is bv
-        reg.register("slow", {"not": {"type": "string"}})  # sequential-only
+        reg.register("slow", {"uniqueItems": True})  # sequential-only
         assert reg.batch_validator() is bv
         reg.evict("slow")
         assert reg.batch_validator() is bv
@@ -395,7 +399,7 @@ class TestSchemaRegistry:
     def test_validate_mixed_routes_unbatchable_to_fallback(self):
         reg = SchemaRegistry()
         reg.register("fast", S1)
-        reg.register("slow", {"not": {"type": "string"}})  # sequential-only
+        reg.register("slow", {"uniqueItems": True})  # sequential-only
         docs = [{"name": "x"}, 42, {"name": ""}]
         endpoints = ["fast", "slow", "fast"]
         table = encode_batch(docs, max_nodes=16)
@@ -408,7 +412,7 @@ class TestSchemaRegistry:
             bool(v) if d else reg.get(e).validator.is_valid(doc)
             for v, d, e, doc in zip(valid, decided, endpoints, docs)
         ]
-        assert verdict == [True, True, False]  # 42 is not a string -> "not" passes
+        assert verdict == [True, True, False]  # 42 is not an array -> uniqueItems passes
 
     def test_validate_mixed_rejects_unknown_endpoint(self):
         reg = SchemaRegistry()
@@ -419,7 +423,7 @@ class TestSchemaRegistry:
 
     def test_registry_without_batchable_members(self):
         reg = SchemaRegistry()
-        reg.register("slow", {"not": {"type": "string"}})
+        reg.register("slow", {"uniqueItems": True})
         assert reg.linked_tape() is None and reg.batch_validator() is None
         table = encode_batch([1], max_nodes=16)
         valid, decided = reg.validate_mixed(table, ["slow"])
