@@ -1,0 +1,130 @@
+"""Fault-containment overhead + degraded-mode throughput (DESIGN.md §11).
+
+Two questions, both machine-checked across PRs via
+``results/BENCH_robustness.json``:
+
+1. **Clean-path overhead**: what does the containment machinery (the
+   ``validate_isolated`` launch wrapper with its fault seam, plus the
+   pre-encode admission resource guard) cost when *no* fault is armed?
+   Must stay <5% of the linked-launch µs/doc that ``BENCH_registry``
+   reports at B=4096.
+2. **Poisoned throughput**: with 1–10% of documents injected to fail at
+   launch, how much throughput does the bisecting isolator preserve for
+   the healthy rows (worst case O(P·log B) extra launches)?
+
+Same schemas, mix, and encode budget as ``benchmarks/registry.py`` so
+the numbers are directly comparable.
+"""
+
+from __future__ import annotations
+
+import json
+import random
+import time
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.outcomes import GuardLimits, resource_guard
+from repro.data.doc_table import encode_batch
+from repro.registry import SchemaRegistry
+from repro.registry.presets import GATEWAY_SCHEMAS as SCHEMAS
+from repro.serve.faults import FaultInjector
+
+from .registry import MAX_NODES, _mixed_stream
+
+BATCH = 4096
+POISON_RATES = (0.01, 0.05, 0.10)
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+
+def _best_of(fn, n=5) -> float:
+    times = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return min(times)
+
+
+def run(report: Dict[str, object]) -> List[str]:
+    lines: List[str] = []
+    rng = random.Random(0)
+
+    reg = SchemaRegistry(use_pallas=False)
+    for name, schema in SCHEMAS.items():
+        reg.register(name, schema)
+    bv = reg.batch_validator()
+    docs, endpoints = _mixed_stream(BATCH, rng)
+    ids = reg.schema_ids(endpoints).astype(np.int32)
+    table = encode_batch(docs, max_nodes=MAX_NODES)
+    keys = list(range(BATCH))
+
+    # -- clean path: raw launch vs the containment wrapper -------------------
+    raw_valid, raw_decided, _ = bv.validate_ex(table, ids)  # warm the jit
+    iso_valid, iso_decided, _, errors = bv.validate_isolated(table, ids, keys=keys)
+    assert not errors and (raw_valid == iso_valid).all()
+    assert (raw_decided == iso_decided).all()
+
+    t_raw = _best_of(lambda: bv.validate_ex(table, ids))
+    t_iso = _best_of(lambda: bv.validate_isolated(table, ids, keys=keys))
+    overhead_pct = 100.0 * (t_iso - t_raw) / t_raw
+
+    # -- admission guard (runs per document, before encode) ------------------
+    limits = GuardLimits()
+    t_guard = _best_of(lambda: [resource_guard(d, limits) for d in docs])
+
+    raw_us = t_raw / BATCH * 1e6
+    iso_us = t_iso / BATCH * 1e6
+    guard_us = t_guard / BATCH * 1e6
+    lines.append(f"launch_raw,{raw_us:.3f},B={BATCH}")
+    lines.append(f"launch_isolated,{iso_us:.3f},overhead={overhead_pct:.2f}%")
+    lines.append(f"resource_guard,{guard_us:.3f},per-doc pre-encode")
+
+    # -- throughput under injected poison ------------------------------------
+    poisoned_rows = []
+    for rate in POISON_RATES:
+        inj = FaultInjector(seed=42).rate("launch", rate)
+        n_poison = len(inj.poisoned_keys("launch", keys))
+
+        def poisoned():
+            with FaultInjector(seed=42).rate("launch", rate):
+                return bv.validate_isolated(table, ids, keys=keys)
+
+        _, p_decided, _, p_errors = poisoned()  # warm bisection shapes
+        assert len(p_errors) == n_poison
+        healthy = int(p_decided.sum())
+        t_poison = _best_of(poisoned, n=3)
+        poisoned_rows.append(
+            {
+                "rate": rate,
+                "n_poisoned": n_poison,
+                "healthy_decided": healthy,
+                "total_us_per_doc": t_poison / BATCH * 1e6,
+                "healthy_docs_per_s": healthy / t_poison,
+                "slowdown_vs_clean": t_poison / t_iso,
+            }
+        )
+        lines.append(
+            f"poison_{int(rate * 100)}pct,{t_poison / BATCH * 1e6:.3f},"
+            f"x{t_poison / t_iso:.2f} vs clean"
+        )
+
+    payload = {
+        "batch": BATCH,
+        "max_nodes": MAX_NODES,
+        "clean_path": {
+            "launch_raw_us_per_doc": raw_us,
+            "launch_isolated_us_per_doc": iso_us,
+            "containment_overhead_pct": overhead_pct,
+            "guard_us_per_doc": guard_us,
+        },
+        "poisoned": poisoned_rows,
+    }
+    RESULTS.mkdir(exist_ok=True)
+    out = RESULTS / "BENCH_robustness.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    report["robustness"] = payload
+    lines.append(f"# wrote {out}")
+    return lines

@@ -8,6 +8,7 @@ One module per paper table/figure:
   registry     -- beyond-paper multi-tenant mixed traffic (linked tape)
   recursive    -- beyond-paper recursive-$ref unrolling (frontier routing)
   logical      -- beyond-paper logical-applicator circuits (tagged unions)
+  robustness   -- fault-containment overhead + poisoned-batch throughput
   roofline     -- §Roofline terms from the dry-run artifacts
 
 Prints ``name,us_per_call,derived`` CSV lines and writes the full report
@@ -35,6 +36,7 @@ def main() -> None:
         logical,
         recursive,
         registry,
+        robustness,
         roofline,
         validation,
     )
@@ -47,6 +49,7 @@ def main() -> None:
         ("registry", registry),
         ("recursive", recursive),
         ("logical", logical),
+        ("robustness", robustness),
         ("roofline", roofline),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None

@@ -10,6 +10,20 @@ from .compiler import CompiledSchema, CompilerOptions, compile_schema
 from .executor import Validator
 from .interpreter import NaiveValidator
 from .doc_model import parse_document
+from .outcomes import (
+    BreakerConfig,
+    CircuitBreaker,
+    DocumentDepthError,
+    GuardLimits,
+    InjectedFault,
+    ValidationBudget,
+    ValidationOutcome,
+    ValidationTimeout,
+    Verdict,
+    fault_point,
+    resource_guard,
+    set_fault_hook,
+)
 from .schema_resolver import Dialect
 
 __all__ = [
@@ -20,4 +34,16 @@ __all__ = [
     "NaiveValidator",
     "parse_document",
     "Dialect",
+    "BreakerConfig",
+    "CircuitBreaker",
+    "DocumentDepthError",
+    "GuardLimits",
+    "InjectedFault",
+    "ValidationBudget",
+    "ValidationOutcome",
+    "ValidationTimeout",
+    "Verdict",
+    "fault_point",
+    "resource_guard",
+    "set_fault_hook",
 ]

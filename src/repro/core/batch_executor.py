@@ -60,7 +60,7 @@ the tape itself.
 from __future__ import annotations
 
 import functools
-from typing import Dict, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +68,7 @@ import numpy as np
 
 from ..kernels import ops as kops
 from .nodetypes import T_ARR as _T_ARR, T_OBJ as _T_OBJ
+from .outcomes import fault_hook_armed, fault_point
 from .tape import (
     CK_AND,
     CK_NOT,
@@ -310,24 +311,90 @@ class BatchValidator:
         can count ``unroll_overflow`` fallbacks distinctly.
         """
         B = table.batch
+        ids = self._normalize_ids(B, schema_ids)
+        cols = {k: jnp.asarray(v) for k, v in table.columns().items()}
+        valid, in_depth, frontier = self._fn(cols, jnp.asarray(ids))
+        frontier = np.asarray(frontier)
+        decided = np.asarray(in_depth) & ~frontier & np.asarray(table.ok)
+        return np.asarray(valid), decided, frontier & np.asarray(table.ok)
+
+    def _normalize_ids(self, B: int, schema_ids) -> np.ndarray:
         if schema_ids is None:
             if self.tape.n_members > 1:
                 raise ValueError(
                     "linked tape: per-document schema_ids are required "
                     "(member 0 would otherwise be guessed silently)"
                 )
-            ids = np.zeros(B, np.int32)
-        else:
-            ids = np.asarray(schema_ids, np.int32)
-            if ids.shape != (B,):
-                raise ValueError(f"schema_ids shape {ids.shape} != ({B},)")
-            if ids.size and (ids.min() < 0 or ids.max() >= self.tape.n_members):
-                raise ValueError("schema_ids outside the tape's member range")
-        cols = {k: jnp.asarray(v) for k, v in table.columns().items()}
-        valid, in_depth, frontier = self._fn(cols, jnp.asarray(ids))
-        frontier = np.asarray(frontier)
-        decided = np.asarray(in_depth) & ~frontier & np.asarray(table.ok)
-        return np.asarray(valid), decided, frontier & np.asarray(table.ok)
+            return np.zeros(B, np.int32)
+        ids = np.asarray(schema_ids, np.int32)
+        if ids.shape != (B,):
+            raise ValueError(f"schema_ids shape {ids.shape} != ({B},)")
+        if ids.size and (ids.min() < 0 or ids.max() >= self.tape.n_members):
+            raise ValueError("schema_ids outside the tape's member range")
+        return ids
+
+    def validate_isolated(
+        self, table, schema_ids=None, *, keys: Optional[Sequence[Any]] = None
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, Dict[int, str]]:
+        """:meth:`validate_ex` with per-document launch-fault containment.
+
+        A launch that raises (device error, injected ``"launch"`` fault)
+        is bisected: rows are split in half and relaunched recursively
+        until the poison is cornered in a single-row launch, whose error
+        is recorded in ``errors[row]``; every other row's verdict is
+        bit-identical to a fault-free run (the batched executor is
+        row-independent, so sub-batch launches reproduce full-batch
+        results exactly).  Worst case P poisoned rows cost
+        O(P·log B) extra launches; halving keeps sub-batch shapes to at
+        most log2(B) distinct jit traces.  Rows already error-isolated
+        at encode time (``table.errors``) launch as zeroed ok=False rows
+        and keep their encode error.
+
+        Returns ``(valid, decided, frontier, errors)``; ``errors`` rows
+        are ERROR_ISOLATED -- callers must not route them to fallback.
+        """
+        B = table.batch
+        ids = self._normalize_ids(B, schema_ids)
+        row_keys = list(keys) if keys is not None else list(range(B))
+        if len(row_keys) != B:
+            raise ValueError(f"{len(row_keys)} keys for batch of {B}")
+        valid = np.zeros(B, bool)
+        decided = np.zeros(B, bool)
+        frontier = np.zeros(B, bool)
+        errors: Dict[int, str] = dict(table.errors)
+        stack: List[List[int]] = [list(range(B))]
+        while stack:
+            rows = stack.pop()
+            full = len(rows) == B
+            # the full-batch launch reuses the caller's table/ids objects:
+            # a fresh ids copy per call would defeat the executor's
+            # same-identity host->device transfer cache (~5% per launch)
+            sub = table if full else table.take(rows)
+            sub_ids = ids if full else ids[rows]
+            try:
+                if fault_hook_armed():  # skip the key tuple on the clean path
+                    fault_point("launch", tuple(row_keys[i] for i in rows))
+                v, d, f = self.validate_ex(sub, sub_ids)
+            except Exception as exc:
+                if len(rows) == 1:
+                    errors[rows[0]] = f"launch: {type(exc).__name__}: {exc}"
+                    continue
+                mid = len(rows) // 2
+                stack.append(rows[mid:])
+                stack.append(rows[:mid])
+                continue
+            if full:
+                valid[:] = v
+                decided[:] = d
+                frontier[:] = f
+            else:
+                valid[rows] = v
+                decided[rows] = d
+                frontier[rows] = f
+        for r in errors:
+            decided[r] = False
+            frontier[r] = False
+        return valid, decided, frontier, errors
 
 
 def _propagate_locations(

@@ -33,6 +33,7 @@ from .doc_model import (
 )
 from .instructions import Instruction, Instructions, OpCode
 from .json_pointer import MISSING, get_instance
+from .outcomes import DocumentDepthError, ValidationBudget, ValidationTimeout
 
 __all__ = ["Validator", "EvalContext"]
 
@@ -40,7 +41,14 @@ __all__ = ["Validator", "EvalContext"]
 class EvalContext:
     """Preallocated, reusable evaluation state (§4.5)."""
 
-    __slots__ = ("labels", "use_hashing", "_match_cache", "_path_cache", "trace")
+    __slots__ = (
+        "labels",
+        "use_hashing",
+        "_match_cache",
+        "_path_cache",
+        "trace",
+        "budget",
+    )
 
     def __init__(self, labels: Dict[int, Instructions], use_hashing: bool = True):
         self.labels = labels
@@ -55,6 +63,9 @@ class EvalContext:
         # failure trace (paper §8 "helpful error messages" option): None on
         # the hot path; a list during Validator.explain()
         self.trace = None
+        # fallback deadline/step budget (DESIGN.md §11): None on the hot
+        # path; a ValidationBudget during Validator.is_valid_bounded()
+        self.budget = None
 
 
 def _cached_path(inst: Instruction, ctx: "EvalContext") -> tuple:
@@ -114,14 +125,57 @@ class Validator:
     # -- public API ----------------------------------------------------------
 
     def is_valid(self, document: Any, *, parsed: bool = False) -> bool:
-        """Validate a document (a plain parsed-JSON value by default)."""
-        doc = document if parsed else parse_document(document)
-        if self._fn is not None:
-            return self._fn(doc)
-        return _eval_group(self.compiled.instructions, doc, self.ctx)
+        """Validate a document (a plain parsed-JSON value by default).
+
+        Deeply nested documents raise a structured
+        :class:`~repro.core.outcomes.DocumentDepthError` instead of an
+        interpreter ``RecursionError`` (the same explicit bound the naive
+        interpreter enforces at ``core/interpreter.py``) -- callers on
+        the serving path convert it into a reject-with-reason.
+        """
+        try:
+            doc = document if parsed else parse_document(document)
+            if self._fn is not None:
+                return self._fn(doc)
+            return _eval_group(self.compiled.instructions, doc, self.ctx)
+        except RecursionError:
+            raise DocumentDepthError(
+                "document nesting exceeds the evaluation stack"
+            ) from None
 
     # paper terminology alias
     validate = is_valid
+
+    def is_valid_bounded(
+        self, document: Any, *, budget: ValidationBudget, parsed: bool = False
+    ) -> bool:
+        """Deadline/step-bounded validation for the fallback oracle.
+
+        Raises :class:`~repro.core.outcomes.ValidationTimeout` when the
+        document exhausts the budget's instruction steps, evaluation
+        depth, or wall-clock deadline, and
+        :class:`~repro.core.outcomes.DocumentDepthError` when parsing
+        itself over-recurses -- depth bombs and pathological ``pattern``
+        backtracking become structured rejects instead of a stalled
+        engine.  Always runs the instruction interpreter: the codegen
+        closures are the unmetered hot path, by design.
+        """
+        budget.check_deadline()
+        try:
+            doc = document if parsed else parse_document(document)
+        except RecursionError:
+            raise DocumentDepthError(
+                "document nesting exceeds the parse stack"
+            ) from None
+        self.ctx.budget = budget
+        try:
+            return _eval_group(self.compiled.instructions, doc, self.ctx)
+        except RecursionError:
+            raise ValidationTimeout(
+                "evaluation recursion exceeded the interpreter stack"
+            ) from None
+        finally:
+            self.ctx.budget = None
 
     def explain(self, document: Any, *, parsed: bool = False):
         """Diagnostic validation (paper §8's error-message option).
@@ -150,6 +204,22 @@ class Validator:
 
 def _eval_group(instructions: Instructions, value: Any, ctx: EvalContext) -> bool:
     """AND over a group; the loop terminates early on first failure (§5.1)."""
+    budget = ctx.budget
+    if budget is not None:
+        # bounded fallback (DESIGN.md §11): meter instructions and bound
+        # the evaluation recursion explicitly -- the clean path pays only
+        # the None check above
+        budget.enter_group()
+        try:
+            for inst in instructions:
+                budget.tick()
+                if not _eval_one(inst, value, ctx):
+                    if ctx.trace is not None and inst.schema_path:
+                        ctx.trace.append((inst.schema_path, type(inst).__name__))
+                    return False
+            return True
+        finally:
+            budget.exit_group()
     for inst in instructions:
         if not _eval_one(inst, value, ctx):
             if ctx.trace is not None and inst.schema_path:
@@ -218,6 +288,10 @@ def _eval_one(inst: Instruction, value: Any, ctx: EvalContext) -> bool:
     if op is OpCode.REGEX:
         if not isinstance(target, str):
             return True
+        if ctx.budget is not None and inst.plan.uses_engine:
+            # engine regexes cannot be preempted mid-match: gate
+            # backtracking-prone patterns / oversized subjects up front
+            ctx.budget.regex_gate(inst.plan, len(target))
         return inst.plan.matches(target)
     if op is OpCode.STRING_SIZE_GREATER:
         if not isinstance(target, str):

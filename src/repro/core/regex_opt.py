@@ -44,13 +44,22 @@ _LENGTH_RANGE = re.compile(r"^\^\.\{(\d+)(,(\d*))?\}\$$")
 
 @dataclass(frozen=True)
 class RegexPlan:
-    """Statically analysed pattern with a fast-path classification."""
+    """Statically analysed pattern with a fast-path classification.
+
+    ``risky`` marks GENERIC patterns whose shape can backtrack
+    superlinearly (nested/adjacent quantified groups, quantified
+    alternation) -- classified once at compile time, in the paper's
+    spirit.  The bounded fallback executor refuses to run risky engine
+    patterns under a deadline (``ValidationBudget.regex_gate``), because
+    ``re`` cannot be preempted mid-match.
+    """
 
     source: str
     kind: RegexKind
     literal: str = ""
     min_len: int = 0
     max_len: Optional[int] = None
+    risky: bool = False
 
     def matches(self, value: str) -> bool:
         """Evaluate the plan against a string (search semantics)."""
@@ -93,6 +102,17 @@ def _is_literal(fragment: str) -> bool:
     return not any(ch in _META for ch in fragment)
 
 
+# A quantified group whose body itself contains a quantifier or an
+# alternation -- the classic exponential-backtracking shapes ((a+)+,
+# (a|aa)*, (\d*)+...).  Conservative by construction: flagging a safe
+# pattern only forces it onto the unbounded (non-deadline) path.
+_NESTED_QUANT = re.compile(r"\((?:[^()\\]|\\.)*[*+|](?:[^()\\]|\\.)*\)\s*[*+{]")
+
+
+def _backtracking_prone(source: str) -> bool:
+    return _NESTED_QUANT.search(source) is not None
+
+
 def analyze_pattern(source: str, *, enabled: bool = True) -> RegexPlan:
     """Classify ``source`` into a :class:`RegexPlan`.
 
@@ -100,7 +120,7 @@ def analyze_pattern(source: str, *, enabled: bool = True) -> RegexPlan:
     ablation benchmark to disable this optimization wholesale.
     """
     if not enabled:
-        plan = RegexPlan(source, RegexKind.GENERIC)
+        plan = RegexPlan(source, RegexKind.GENERIC, risky=_backtracking_prone(source))
         _engine(source)  # precompile eagerly either way
         return plan
 
@@ -134,4 +154,4 @@ def analyze_pattern(source: str, *, enabled: bool = True) -> RegexPlan:
         return RegexPlan(source, RegexKind.CONTAINS, literal=source)
 
     _engine(source)  # precompile eagerly (Boost.Regex 'optimize' analogue)
-    return RegexPlan(source, RegexKind.GENERIC)
+    return RegexPlan(source, RegexKind.GENERIC, risky=_backtracking_prone(source))

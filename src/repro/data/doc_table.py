@@ -18,14 +18,15 @@ conformance oracle.  This deviation is recorded in DESIGN.md §7.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.doc_model import HashedObject
 from ..core.hashing import SHORT_LIMIT, hash_lanes, shash_bytes
 from ..core.nodetypes import TYPE_CODES
+from ..core.outcomes import fault_point
 
 __all__ = ["TokenTable", "encode_document", "encode_batch", "key_lanes", "TYPE_CODES"]
 
@@ -80,6 +81,9 @@ class TokenTable:
     str_last: np.ndarray  # uint32 (B, N)  last byte of string value
     n_nodes: np.ndarray  # int32  (B,)
     ok: np.ndarray  # bool (B,)  encoded within budget
+    # row index -> error message for rows whose *encode* raised (isolated
+    # faults, not budget overflows); those rows also have ok=False.
+    errors: Dict[int, str] = field(default_factory=dict)
 
     @property
     def batch(self) -> int:
@@ -106,6 +110,14 @@ class TokenTable:
             "n_nodes": self.n_nodes,
             "ok": self.ok,
         }
+
+    def take(self, rows: Sequence[int]) -> "TokenTable":
+        """Row-slice a sub-batch (used by the bisecting launch isolator)."""
+        idx = np.asarray(rows, np.int64)
+        cols = {k: v[idx] for k, v in self.columns().items()}
+        remap = {int(r): j for j, r in enumerate(idx)}
+        errs = {remap[r]: m for r, m in self.errors.items() if r in remap}
+        return TokenTable(errors=errs, **cols)
 
 
 def _items_of(value: Any):
@@ -188,21 +200,56 @@ def encode_document(
     return cols
 
 
-def encode_batch(docs: List[Any], max_nodes: int = 256, max_depth: int = 16) -> TokenTable:
-    """Encode a batch of documents; oversize docs get ok=False rows."""
+def encode_batch(
+    docs: List[Any],
+    max_nodes: int = 256,
+    max_depth: int = 16,
+    *,
+    isolate: bool = False,
+    keys: Optional[Sequence[Any]] = None,
+) -> TokenTable:
+    """Encode a batch of documents; oversize docs get ok=False rows.
+
+    With ``isolate=True`` a per-document encode exception (including an
+    injected ``"encode"`` fault and ``RecursionError`` on hostile
+    nesting) is trapped into ``TokenTable.errors[row]`` instead of
+    aborting the whole batch; the poisoned row becomes an all-zero
+    ok=False row, so every other row encodes bit-identically to a
+    poison-free run.  ``keys`` names each row at the fault seam
+    (defaults to the row index).
+    """
     batch = len(docs)
     stacked: Dict[str, List[np.ndarray]] = {}
     ok = np.ones(batch, bool)
     n_nodes = np.zeros(batch, np.int32)
+    errors: Dict[int, str] = {}
     template = encode_document(None, max_nodes)
+    zero_cols = None
     for b, doc in enumerate(docs):
-        cols = encode_document(doc, max_nodes, max_depth)
+        if isolate:
+            try:
+                fault_point("encode", keys[b] if keys is not None else b)
+                cols = encode_document(doc, max_nodes, max_depth)
+            except RecursionError:
+                errors[b] = "encode recursion limit exceeded"
+                cols = None
+            except Exception as exc:  # isolated per-document fault
+                errors[b] = f"{type(exc).__name__}: {exc}"
+                cols = None
+        else:
+            cols = encode_document(doc, max_nodes, max_depth)
         if cols is None:
-            ok[b] = False
-            cols = {k: np.zeros_like(v) for k, v in template.items() if k != "n_nodes"}
+            ok[b] = False  # budget overflow (fallback) or isolated error row
+            if zero_cols is None:
+                zero_cols = {
+                    k: np.zeros_like(v)
+                    for k, v in template.items()
+                    if k != "n_nodes"
+                }
+            cols = dict(zero_cols)
             cols["n_nodes"] = np.int32(0)
         n_nodes[b] = cols.pop("n_nodes")
         for k, v in cols.items():
             stacked.setdefault(k, []).append(v)
     arrays = {k: np.stack(v) for k, v in stacked.items()}
-    return TokenTable(n_nodes=n_nodes, ok=ok, **arrays)
+    return TokenTable(n_nodes=n_nodes, ok=ok, errors=errors, **arrays)

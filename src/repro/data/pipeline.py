@@ -21,6 +21,7 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 import numpy as np
 
 from ..core import Validator
+from ..core.outcomes import Verdict
 from ..registry import SchemaRegistry
 from . import tokenizer
 from .doc_table import encode_batch
@@ -42,6 +43,11 @@ class PipelineStats:
     undecided: int = 0
     oversize: int = 0
     unroll_overflow: int = 0
+    # fault-containment dispositions (DESIGN.md §11); all are rejects
+    rejected_guard: int = 0
+    error_isolated: int = 0
+    timed_out: int = 0
+    breaker_open: int = 0
 
 
 class AdmissionController:
@@ -125,31 +131,55 @@ class AdmissionController:
     def admit(
         self, records: List[Any], endpoints: Optional[List[str]] = None
     ) -> List[bool]:
+        """Boolean-verdict admission (back-compat view of :meth:`admit_ex`)."""
+        if self.use_batch:
+            return [v.valid for v in self.admit_ex(records, endpoints)]
         if endpoints is None:
             endpoints = [self.endpoint] * len(records)
-        self.stats.seen += len(records)
-        if self.use_batch:
-            results, counts = self.registry.admit_mixed(
-                records, endpoints, max_nodes=self.batch_max_nodes
+        if len(endpoints) != len(records):
+            raise ValueError(
+                f"{len(endpoints)} endpoints for {len(records)} records"
             )
-            self.stats.batch_validated += counts.batch_validated
-            self.stats.undecided += counts.undecided
-            self.stats.oversize += counts.oversize
-            self.stats.unroll_overflow += counts.unroll_overflow
-            self.stats.fallback_validated += counts.fallback_validated
-        else:
-            if len(endpoints) != len(records):
-                raise ValueError(
-                    f"{len(endpoints)} endpoints for {len(records)} records"
-                )
-            results = [
-                self.registry.get(e).validator.is_valid(r)
-                for e, r in zip(endpoints, records)
-            ]
-            self.stats.fallback_validated += len(records)
+        self.stats.seen += len(records)
+        results = [
+            self.registry.get(e).validator.is_valid(r)
+            for e, r in zip(endpoints, records)
+        ]
+        self.stats.fallback_validated += len(records)
         self.stats.admitted += sum(results)
         self.stats.rejected += len(results) - sum(results)
         return results
+
+    def admit_ex(
+        self,
+        records: List[Any],
+        endpoints: Optional[List[str]] = None,
+        *,
+        keys: Optional[List[Any]] = None,
+    ) -> List[Verdict]:
+        """Fault-contained admission through the registry's containment
+        ladder (guards -> isolated batched launch -> bounded fallback);
+        one structured :class:`Verdict` per record, and ``seen`` always
+        equals the sum of all disposition counters."""
+        if endpoints is None:
+            endpoints = [self.endpoint] * len(records)
+        self.stats.seen += len(records)
+        verdicts, counts = self.registry.admit_mixed_ex(
+            records, endpoints, max_nodes=self.batch_max_nodes, keys=keys
+        )
+        self.stats.batch_validated += counts.batch_validated
+        self.stats.undecided += counts.undecided
+        self.stats.oversize += counts.oversize
+        self.stats.unroll_overflow += counts.unroll_overflow
+        self.stats.fallback_validated += counts.fallback_validated
+        self.stats.rejected_guard += counts.rejected_guard
+        self.stats.error_isolated += counts.error_isolated
+        self.stats.timed_out += counts.timed_out
+        self.stats.breaker_open += counts.breaker_open
+        admitted = sum(1 for v in verdicts if v.admitted)
+        self.stats.admitted += admitted
+        self.stats.rejected += len(verdicts) - admitted
+        return verdicts
 
 
 @dataclass

@@ -7,7 +7,13 @@ kernel launch (DESIGN.md §8).
 """
 
 from .linker import LinkedTape, TapeSegment, link_tapes, segment_tape
-from .registry import AdmitCounts, SchemaEntry, SchemaRegistry, SchemaStats
+from .registry import (
+    AdmitCounts,
+    RegistrationError,
+    SchemaEntry,
+    SchemaRegistry,
+    SchemaStats,
+)
 
 __all__ = [
     "LinkedTape",
@@ -15,6 +21,7 @@ __all__ = [
     "link_tapes",
     "segment_tape",
     "AdmitCounts",
+    "RegistrationError",
     "SchemaEntry",
     "SchemaRegistry",
     "SchemaStats",

@@ -33,16 +33,38 @@ from __future__ import annotations
 import copy
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core import CompiledSchema, Validator, compile_schema
+from ..core import CompiledSchema, NaiveValidator, Validator, compile_schema
 from ..core.batch_executor import BatchValidator
+from ..core.outcomes import (
+    BreakerConfig,
+    CircuitBreaker,
+    DocumentDepthError,
+    GuardLimits,
+    ValidationBudget,
+    ValidationOutcome,
+    ValidationTimeout,
+    Verdict,
+    fault_point,
+    resource_guard,
+)
 from ..core.tape import DEFAULT_UNROLL_DEPTH, LocationTape, try_build_tape
 from .linker import LinkedTape, TapeSegment, link_tapes, segment_tape
 
-__all__ = ["SchemaStats", "SchemaEntry", "SchemaRegistry", "AdmitCounts"]
+__all__ = [
+    "SchemaStats",
+    "SchemaEntry",
+    "SchemaRegistry",
+    "AdmitCounts",
+    "RegistrationError",
+]
+
+
+class RegistrationError(RuntimeError):
+    """A registration failed build/verify/link; the prior version serves."""
 
 
 @dataclass
@@ -54,6 +76,11 @@ class AdmitCounts:
     oversize: int = 0  # batchable but past the encoder node budget -> fallback
     unroll_overflow: int = 0  # recursion outran the $ref-unroll budget -> fallback
     fallback_validated: int = 0  # sequential verdicts (incl. all of the above)
+    # fault-containment dispositions (DESIGN.md §11)
+    rejected_guard: int = 0  # admission resource guard said no (pre-encode)
+    error_isolated: int = 0  # per-document encode/launch/fallback error trapped
+    timed_out: int = 0  # bounded fallback ran out of budget/deadline
+    breaker_open: int = 0  # fallback suspended: endpoint degraded (guard-only)
 
 
 @dataclass
@@ -104,12 +131,28 @@ class SchemaRegistry:
         layout: str = "csr",
         max_depth: int = 16,
         unroll_depth: int = DEFAULT_UNROLL_DEPTH,
+        guard: GuardLimits = GuardLimits(),
+        breaker: BreakerConfig = BreakerConfig(),
+        fallback_max_steps: int = 500_000,
+        fallback_deadline_s: Optional[float] = 0.25,
+        clock: Callable[[], float] = time.monotonic,
     ):
         self.engine = engine
         self.use_pallas = use_pallas
         self.layout = layout
         self.max_depth = max_depth
         self.unroll_depth = unroll_depth
+        # fault-containment knobs (DESIGN.md §11): admission guards,
+        # bounded-fallback budget, and per-endpoint breaker config.  The
+        # clock is injectable so breaker trips/recoveries test
+        # deterministically.
+        self.guard = guard
+        self.breaker_cfg = breaker
+        self.fallback_max_steps = fallback_max_steps
+        self.fallback_deadline_s = fallback_deadline_s
+        self.clock = clock
+        self._breakers: Dict[str, CircuitBreaker] = {}
+        self._swap_failures: Dict[str, str] = {}
         self._entries: Dict[str, Dict[int, SchemaEntry]] = {}
         self._active: Dict[str, int] = {}  # endpoint -> serving version
         self._order: List[str] = []  # registration order = member order
@@ -131,7 +174,9 @@ class SchemaRegistry:
 
     # -- registration ---------------------------------------------------------
 
-    def register(self, endpoint: str, schema: Any) -> SchemaEntry:
+    def register(
+        self, endpoint: str, schema: Any, *, verify: str = "fast"
+    ) -> SchemaEntry:
         """Compile + cache ``schema`` as the next version of ``endpoint``.
 
         All control-plane cost lands here, at registration time: schema
@@ -142,6 +187,15 @@ class SchemaRegistry:
         included) pays.  Re-registering the currently-serving schema
         verbatim is a no-op returning the existing entry (no version
         bump, no re-link, no jit discard).
+
+        Hot-swap safety: the new version is built, smoke-verified
+        (``verify="fast"``: differential spot-check of the compiled
+        validator against the naive interpreter on a synthetic probe
+        corpus), and trial-segmented *before* any registry state
+        mutates.  Any failure raises :class:`RegistrationError`, records
+        the reason (:meth:`swap_failures`), and leaves the prior version
+        serving -- a bad schema version never reaches traffic.
+        ``verify="off"`` skips the differential probes.
         """
         if endpoint in self._active:
             current = self.get(endpoint)
@@ -151,13 +205,31 @@ class SchemaRegistry:
         # the dict they registered cannot corrupt (or no-op-skip) later
         # registrations against the served version
         schema = copy.deepcopy(schema)
-        t0 = time.perf_counter()
-        compiled = compile_schema(schema)
-        validator = Validator(compiled, engine=self.engine)
-        t_compile = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        tape, reason = try_build_tape(compiled, unroll_depth=self.unroll_depth)
-        t_tape = time.perf_counter() - t0
+        # -- build (no state mutated on failure) ------------------------------
+        try:
+            t0 = time.perf_counter()
+            compiled = compile_schema(schema)
+            validator = Validator(compiled, engine=self.engine)
+            t_compile = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            tape, reason = try_build_tape(compiled, unroll_depth=self.unroll_depth)
+            t_tape = time.perf_counter() - t0
+        except Exception as exc:
+            raise self._swap_failed(endpoint, f"build: {type(exc).__name__}: {exc}")
+        # -- smoke-verify before swap (Type Safety w/ JSON Subschema spirit) --
+        if verify != "off":
+            mismatch = self._smoke_verify(schema, validator)
+            if mismatch:
+                raise self._swap_failed(endpoint, f"verify: {mismatch}")
+        # -- trial link: segment the tape before committing membership --------
+        segment: Optional[TapeSegment] = None
+        if tape is not None:
+            try:
+                fault_point("link", endpoint)
+                segment = segment_tape(tape)
+            except Exception as exc:
+                raise self._swap_failed(endpoint, f"link: {type(exc).__name__}: {exc}")
+        # -- commit: atomically swap the serving version ----------------------
         stats = SchemaStats(
             compile_seconds=t_compile,
             tape_seconds=t_tape,
@@ -192,9 +264,88 @@ class SchemaRegistry:
         self._active[endpoint] = version
         if endpoint not in self._order:
             self._order.append(endpoint)
+        if segment is not None:
+            self._segments[(endpoint, version)] = segment
+        self._swap_failures.pop(endpoint, None)
         self._generation += 1
         self._relink()  # eager: keep re-link cost off the serving path
         return entry
+
+    def _swap_failed(self, endpoint: str, reason: str) -> RegistrationError:
+        self._swap_failures[endpoint] = reason
+        serving = ""
+        if endpoint in self._active:
+            serving = f"; version {self._active[endpoint]} keeps serving"
+        return RegistrationError(f"endpoint {endpoint!r}: {reason}{serving}")
+
+    def swap_failures(self) -> Dict[str, str]:
+        """endpoint -> reason of its most recent *failed* registration
+        (cleared by the next successful swap)."""
+        return dict(self._swap_failures)
+
+    @staticmethod
+    def _synth_probes(schema: Any) -> List[Any]:
+        """Small synthetic corpus for differential smoke-verification."""
+        probes: List[Any] = [None, True, 0, 1.5, "x", [], {}]
+        if isinstance(schema, dict):
+            doc: Dict[str, Any] = {}
+            props = schema.get("properties")
+            props = props if isinstance(props, dict) else {}
+            required = schema.get("required")
+            required = required if isinstance(required, list) else []
+            by_type = {
+                "string": "x",
+                "number": 1,
+                "integer": 1,
+                "boolean": True,
+                "array": [],
+                "object": {},
+                "null": None,
+            }
+            for name in list(props)[:8] + [k for k in required if isinstance(k, str)]:
+                sub = props.get(name)
+                t = sub.get("type") if isinstance(sub, dict) else None
+                if isinstance(t, list) and t:
+                    t = t[0]
+                doc[name] = by_type.get(t, "x")
+            probes.append(doc)
+            probes.append({**doc, "unknown_member_xx": 1})
+        return probes
+
+    def _smoke_verify(self, schema: Any, validator: Validator) -> str:
+        """Differential spot-check vs the naive interpreter; '' = agree.
+
+        A probe that raises in *both* engines is skipped (outside the
+        supported envelope either way); raising in exactly one, or a
+        verdict mismatch, fails the swap.
+        """
+        try:
+            naive = NaiveValidator(schema)
+        except Exception:
+            return ""  # naive oracle unavailable: nothing to differ against
+        for probe in self._synth_probes(schema):
+            got = want = None
+            got_exc = want_exc = None
+            try:
+                got = validator.is_valid(probe)
+            except Exception as exc:
+                got_exc = exc
+            try:
+                want = naive.is_valid(probe)
+            except Exception as exc:
+                want_exc = exc
+            if got_exc is not None and want_exc is not None:
+                continue
+            if got_exc is not None or want_exc is not None:
+                exc = got_exc if got_exc is not None else want_exc
+                which = "compiled" if got_exc is not None else "naive"
+                return (
+                    f"probe {probe!r}: {which} engine raised "
+                    f"{type(exc).__name__}: {exc}"
+                )
+            if bool(got) != bool(want):
+                return f"probe {probe!r}: compiled={got} naive={want}"
+        return ""
 
     def get(self, endpoint: str, version: Optional[int] = None) -> SchemaEntry:
         """The serving (or a pinned historical) entry for ``endpoint``."""
@@ -351,24 +502,58 @@ class SchemaRegistry:
     def admit_mixed(
         self, docs: Sequence[Any], endpoints: Sequence[str], *, max_nodes: int = 256
     ) -> Tuple[List[bool], "AdmitCounts"]:
+        """Boolean-verdict compatibility wrapper over :meth:`admit_mixed_ex`.
+
+        Every non-ADMITTED containment disposition (guard reject,
+        isolated error, timeout, suspended fallback) maps to ``False``.
+        """
+        verdicts, counts = self.admit_mixed_ex(docs, endpoints, max_nodes=max_nodes)
+        return [v.valid for v in verdicts], counts
+
+    def admit_mixed_ex(
+        self,
+        docs: Sequence[Any],
+        endpoints: Sequence[str],
+        *,
+        max_nodes: int = 256,
+        keys: Optional[Sequence[Any]] = None,
+    ) -> Tuple[List[Verdict], "AdmitCounts"]:
         """Full mixed-stream admission: one linked launch + routed fallback.
 
-        Encodes ONLY the rows whose endpoint is a linked-tape member (no
-        wasted encode/launch work on sequential-only traffic), validates
-        them in one batched call, and routes everything else -- rows of
-        unbatchable endpoints and undecided rows -- to that endpoint's
-        sequential validator.  Returns per-row verdicts plus counters;
-        both the serving engine and the pipeline admission controller
-        share this path.
+        The fault-contained serving path (DESIGN.md §11).  Per row:
+        admission resource guards run *before* any encode work
+        (REJECTED_GUARD); linked-tape-member rows encode with
+        per-document isolation and launch through the bisecting isolator
+        (poison rows -> ERROR_ISOLATED, everything else bit-identical to
+        a fault-free run); undecided/unbatchable rows route to that
+        endpoint's *bounded* sequential fallback behind its circuit
+        breaker (TIMED_OUT past the budget; UNDECIDED_FALLBACK while the
+        breaker is open).  Exactly one outcome per row, so
+        ``len(docs) == sum of all outcome counters``.
+
+        ``keys`` names each row at the fault-injection seams (defaults
+        to the row index).  Returns per-row :class:`Verdict`s plus
+        counters; the serving engine and the pipeline admission
+        controller share this path.
         """
         if len(endpoints) != len(docs):
             raise ValueError(f"{len(endpoints)} endpoints for {len(docs)} docs")
         for e in set(endpoints):
             self.get(e)
-        verdicts: List[Optional[bool]] = [None] * len(docs)
+        row_keys = list(keys) if keys is not None else list(range(len(docs)))
+        if len(row_keys) != len(docs):
+            raise ValueError(f"{len(row_keys)} keys for {len(docs)} docs")
+        verdicts: List[Optional[Verdict]] = [None] * len(docs)
         counts = AdmitCounts()
+        for i, doc in enumerate(docs):
+            why = resource_guard(doc, self.guard)
+            if why:
+                verdicts[i] = Verdict(ValidationOutcome.REJECTED_GUARD, False, why)
+                counts.rejected_guard += 1
         ids = self.schema_ids(endpoints)
-        fast = [i for i in range(len(docs)) if ids[i] >= 0]
+        fast = [
+            i for i in range(len(docs)) if ids[i] >= 0 and verdicts[i] is None
+        ]
         if fast:
             from ..data.doc_table import encode_batch
 
@@ -378,15 +563,39 @@ class SchemaRegistry:
             # log2(max burst) instead of one per distinct size
             bucket = 1 << (len(fast) - 1).bit_length() if len(fast) > 1 else 1
             pad = bucket - len(fast)
+            fast_keys = [row_keys[i] for i in fast] + [
+                ("__pad__", j) for j in range(pad)
+            ]
             table = encode_batch(
-                [docs[i] for i in fast] + [None] * pad, max_nodes=max_nodes
+                [docs[i] for i in fast] + [None] * pad,
+                max_nodes=max_nodes,
+                isolate=True,
+                keys=fast_keys,
             )
             pad_ids = np.concatenate([ids[fast], np.zeros(pad, np.int32)])
             bv = self.batch_validator()
-            valid, decided, frontier = bv.validate_ex(table, pad_ids.astype(np.int32))
+            valid, decided, frontier, errors = bv.validate_isolated(
+                table, pad_ids.astype(np.int32), keys=fast_keys
+            )
             for j, i in enumerate(fast):
-                if decided[j]:
-                    verdicts[i] = bool(valid[j])
+                if j in errors:
+                    verdicts[i] = Verdict(
+                        ValidationOutcome.ERROR_ISOLATED,
+                        False,
+                        errors[j],
+                        "batched",
+                    )
+                    counts.error_isolated += 1
+                elif decided[j]:
+                    ok = bool(valid[j])
+                    verdicts[i] = Verdict(
+                        ValidationOutcome.ADMITTED
+                        if ok
+                        else ValidationOutcome.INVALID,
+                        ok,
+                        "" if ok else "schema validation failed",
+                        "batched",
+                    )
                     counts.batch_validated += 1
                 elif not table.ok[j]:
                     counts.oversize += 1  # encoder node/depth budget
@@ -394,8 +603,79 @@ class SchemaRegistry:
                     counts.unroll_overflow += 1  # $ref-unroll budget
                 else:
                     counts.undecided += 1  # executor depth budget
-        for i, v in enumerate(verdicts):
-            if v is None:
-                verdicts[i] = self.get(endpoints[i]).validator.is_valid(docs[i])
-                counts.fallback_validated += 1
+        for i in range(len(docs)):
+            if verdicts[i] is None:
+                v = self._bounded_fallback(endpoints[i], docs[i], row_keys[i])
+                verdicts[i] = v
+                if v.outcome in (
+                    ValidationOutcome.ADMITTED,
+                    ValidationOutcome.INVALID,
+                ):
+                    counts.fallback_validated += 1
+                elif v.outcome is ValidationOutcome.TIMED_OUT:
+                    counts.timed_out += 1
+                elif v.outcome is ValidationOutcome.UNDECIDED_FALLBACK:
+                    counts.breaker_open += 1
+                else:
+                    counts.error_isolated += 1
         return verdicts, counts  # type: ignore[return-value]
+
+    # -- bounded sequential fallback (the second degradation rung) -----------
+
+    def breaker(self, endpoint: str) -> CircuitBreaker:
+        """The endpoint's fallback circuit breaker (created on first use)."""
+        b = self._breakers.get(endpoint)
+        if b is None:
+            b = self._breakers[endpoint] = CircuitBreaker(
+                self.breaker_cfg, clock=self.clock
+            )
+        return b
+
+    def _bounded_fallback(self, endpoint: str, doc: Any, key: Any) -> Verdict:
+        breaker = self.breaker(endpoint)
+        if not breaker.allow():
+            return Verdict(
+                ValidationOutcome.UNDECIDED_FALLBACK,
+                False,
+                "fallback suspended: circuit open (endpoint degraded)",
+            )
+        try:
+            fault_point("fallback", key)
+            budget = ValidationBudget(
+                max_steps=self.fallback_max_steps,
+                deadline_s=self.fallback_deadline_s,
+                clock=self.clock,
+            )
+            ok = self.get(endpoint).validator.is_valid_bounded(doc, budget=budget)
+        except (ValidationTimeout, DocumentDepthError) as exc:
+            breaker.record_timeout()
+            return Verdict(
+                ValidationOutcome.TIMED_OUT, False, str(exc), "sequential"
+            )
+        except Exception as exc:
+            # a per-document error, not an endpoint-health signal: the
+            # breaker only counts timeouts
+            return Verdict(
+                ValidationOutcome.ERROR_ISOLATED,
+                False,
+                f"{type(exc).__name__}: {exc}",
+                "sequential",
+            )
+        breaker.record_success()
+        return Verdict(
+            ValidationOutcome.ADMITTED if ok else ValidationOutcome.INVALID,
+            ok,
+            "" if ok else "schema validation failed",
+            "sequential",
+        )
+
+    def validate_one(self, endpoint: str, doc: Any, *, key: Any = None) -> Verdict:
+        """Single-document admission through the same containment ladder:
+        resource guard, then the breaker-gated bounded fallback."""
+        self.get(endpoint)  # KeyError on unknown endpoints
+        why = resource_guard(doc, self.guard)
+        if why:
+            return Verdict(ValidationOutcome.REJECTED_GUARD, False, why)
+        return self._bounded_fallback(
+            endpoint, doc, key if key is not None else endpoint
+        )

@@ -1,5 +1,6 @@
 """Serving: request admission (Blaze), prefill/decode engine, KV caching."""
 
-from .engine import ServeConfig, ServeEngine
+from .engine import ServeConfig, ServeEngine, SubmitResult
+from .faults import FaultInjector
 
-__all__ = ["ServeConfig", "ServeEngine"]
+__all__ = ["ServeConfig", "ServeEngine", "SubmitResult", "FaultInjector"]

@@ -28,10 +28,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.outcomes import ValidationOutcome
 from ..data import tokenizer
 from ..models.config import ArchConfig
 from ..models.model import Model
 from ..registry import SchemaRegistry
+from ..registry.registry import RegistrationError
 
 REQUEST_SCHEMA: Dict[str, Any] = {
     "$schema": "https://json-schema.org/draft/2020-12/schema",
@@ -73,6 +75,32 @@ class _Slot:
     done: bool = False
 
 
+class SubmitResult(tuple):
+    """A ``(request_id, error)`` pair that also carries the structured
+    :class:`ValidationOutcome`.
+
+    Subclassing ``tuple`` keeps every existing call site working
+    (``rid, err = engine.submit(...)``) while new code reads
+    ``result.outcome`` instead of string-matching the error."""
+
+    outcome: ValidationOutcome
+
+    def __new__(
+        cls, request_id: Optional[int], error: str, outcome: ValidationOutcome
+    ) -> "SubmitResult":
+        self = super().__new__(cls, (request_id, error))
+        self.outcome = outcome
+        return self
+
+    @property
+    def request_id(self) -> Optional[int]:
+        return self[0]
+
+    @property
+    def error(self) -> str:
+        return self[1]
+
+
 @dataclass
 class ServeStats:
     received: int = 0
@@ -93,10 +121,16 @@ class ServeStats:
     # the structural subset; recorded at registration, not a generic
     # "fallback" flag)
     fallback_reasons: Dict[str, str] = field(default_factory=dict)
+    # terminal disposition per received document (DESIGN.md §11): one
+    # ValidationOutcome value each, so received == sum(outcomes.values())
+    outcomes: Dict[str, int] = field(default_factory=dict)
 
     def count(self, endpoint: str, key: str) -> None:
         per = self.by_endpoint.setdefault(endpoint, {"admitted": 0, "rejected": 0})
         per[key] += 1
+
+    def record_outcome(self, outcome: ValidationOutcome) -> None:
+        self.outcomes[outcome.value] = self.outcomes.get(outcome.value, 0) + 1
 
 
 class ServeEngine:
@@ -139,8 +173,21 @@ class ServeEngine:
         """Register (or hot-swap) an endpoint schema, surfacing the real
         tape-build outcome in the engine's stats: endpoints outside the
         structural subset record their ``try_build_tape`` reason string
-        instead of a generic fallback flag."""
-        entry = self.registry.register(endpoint, schema)
+        instead of a generic fallback flag.
+
+        Hot-swap safety: the registry builds, smoke-verifies, and
+        trial-links the new version *before* swapping.  A failed swap on
+        an already-serving endpoint keeps the prior version serving and
+        surfaces the failure in :meth:`endpoint_stats` (``last_swap_error``)
+        rather than raising into the control plane; a failed *first*
+        registration has no prior version to fall back to and re-raises.
+        """
+        try:
+            entry = self.registry.register(endpoint, schema)
+        except RegistrationError:
+            if endpoint in self.registry:
+                return self.registry.get(endpoint)  # prior version serves on
+            raise
         if entry.stats.batchable:
             self.stats.fallback_reasons.pop(endpoint, None)
         else:
@@ -152,6 +199,7 @@ class ServeEngine:
         registry's compile-time facts (batchable, fallback reason,
         unroll budget/frontiers)."""
         out: Dict[str, Dict[str, Any]] = {}
+        swap_failures = self.registry.swap_failures()
         for endpoint in self.registry.endpoints():
             entry = self.registry.get(endpoint)
             per: Dict[str, Any] = dict(
@@ -162,6 +210,10 @@ class ServeEngine:
             per["fallback_reason"] = entry.stats.fallback_reason
             per["unroll_depth"] = entry.stats.unroll_depth
             per["n_frontier"] = entry.stats.n_frontier
+            per["last_swap_error"] = swap_failures.get(endpoint, "")
+            breaker = self.registry.breaker(endpoint)
+            per["breaker_state"] = breaker.state
+            per["breaker_trips"] = breaker.trips
             out[endpoint] = per
         return out
 
@@ -170,50 +222,74 @@ class ServeEngine:
         """The default endpoint's serving validator (hot-swap aware)."""
         return self.registry.get("default").validator
 
-    def submit(
-        self, request_json: str, endpoint: str = "default"
-    ) -> Tuple[Optional[int], str]:
-        """Validate + enqueue one request.  Returns (request_id, error)."""
+    def submit(self, request_json: str, endpoint: str = "default") -> SubmitResult:
+        """Validate + enqueue one request.
+
+        Returns a :class:`SubmitResult` -- unpackable as the historical
+        ``(request_id, error)`` pair, with the structured
+        ``ValidationOutcome`` on ``.outcome``.  Validation runs through
+        the registry's containment ladder: resource guard, then the
+        breaker-gated deadline-bounded sequential oracle.
+        """
         self.stats.received += 1
+        serial = self.stats.received
         request, err = self._parse(request_json, endpoint)
         if err:
-            return None, err
-        entry = self.registry.get(endpoint)
+            return SubmitResult(None, err, ValidationOutcome.REJECTED_GUARD)
         t0 = time.perf_counter()
-        ok = entry.validator.is_valid(request)
+        verdict = self.registry.validate_one(
+            endpoint, request, key=("submit", serial)
+        )
         self.stats.validation_seconds += time.perf_counter() - t0
-        self.stats.fallback_validated += 1
-        if not ok:
-            self.stats.rejected += 1
-            self.stats.count(endpoint, "rejected")
-            return None, "schema validation failed"
-        return self._enqueue(request, endpoint), ""
+        self.stats.record_outcome(verdict.outcome)
+        if verdict.outcome in (
+            ValidationOutcome.ADMITTED,
+            ValidationOutcome.INVALID,
+        ):
+            self.stats.fallback_validated += 1  # the sequential oracle ran
+        if verdict.admitted:
+            return SubmitResult(
+                self._enqueue(request, endpoint), "", verdict.outcome
+            )
+        self.stats.rejected += 1
+        self.stats.count(endpoint, "rejected")
+        if verdict.outcome is ValidationOutcome.INVALID:
+            err = "schema validation failed"
+        else:
+            err = f"{verdict.outcome.value}: {verdict.reason}"
+        return SubmitResult(None, err, verdict.outcome)
 
-    def submit_batch(
-        self, requests: Sequence[Tuple[str, str]]
-    ) -> List[Tuple[Optional[int], str]]:
+    def submit_batch(self, requests: Sequence[Tuple[str, str]]) -> List[SubmitResult]:
         """Admit a mixed-endpoint burst of (endpoint, request_json) pairs.
 
         All parseable requests are validated in ONE batched launch over
         the registry's linked tape; only undecided rows and endpoints
-        outside the structural subset take the sequential fallback.
-        Returns a (request_id, error) pair per input, in order.
+        outside the structural subset take the (bounded) sequential
+        fallback.  Per-document faults are isolated: a poison row gets an
+        ERROR_ISOLATED result while every other row's verdict is
+        bit-identical to a fault-free batch.  Returns a
+        :class:`SubmitResult` per input, in order.
         """
-        out: List[Optional[Tuple[Optional[int], str]]] = [None] * len(requests)
-        parsed: List[Tuple[int, str, Any]] = []
+        out: List[Optional[SubmitResult]] = [None] * len(requests)
+        parsed: List[Tuple[int, str, Any, int]] = []
         for i, (endpoint, request_json) in enumerate(requests):
             self.stats.received += 1
+            serial = self.stats.received
             request, err = self._parse(request_json, endpoint)
             if err:
-                out[i] = (None, err)
+                out[i] = SubmitResult(None, err, ValidationOutcome.REJECTED_GUARD)
             else:
-                parsed.append((i, endpoint, request))
+                parsed.append((i, endpoint, request, serial))
         if parsed:
-            docs = [r for _, _, r in parsed]
-            endpoints = [e for _, e, _ in parsed]
+            docs = [r for _, _, r, _ in parsed]
+            endpoints = [e for _, e, _, _ in parsed]
+            keys = [("batch", s) for _, _, _, s in parsed]
             t0 = time.perf_counter()
-            verdicts, counts = self.registry.admit_mixed(
-                docs, endpoints, max_nodes=self.scfg.admission_max_nodes
+            verdicts, counts = self.registry.admit_mixed_ex(
+                docs,
+                endpoints,
+                max_nodes=self.scfg.admission_max_nodes,
+                keys=keys,
             )
             self.stats.batch_validated += counts.batch_validated
             self.stats.fallback_validated += counts.fallback_validated
@@ -221,28 +297,55 @@ class ServeEngine:
             self.stats.oversize += counts.oversize
             self.stats.unroll_overflow += counts.unroll_overflow
             self.stats.validation_seconds += time.perf_counter() - t0
-            for (i, endpoint, request), ok in zip(parsed, verdicts):
-                if ok:
-                    out[i] = (self._enqueue(request, endpoint), "")
+            for (i, endpoint, request, _), verdict in zip(parsed, verdicts):
+                self.stats.record_outcome(verdict.outcome)
+                if verdict.admitted:
+                    out[i] = SubmitResult(
+                        self._enqueue(request, endpoint), "", verdict.outcome
+                    )
                 else:
                     self.stats.rejected += 1
                     self.stats.count(endpoint, "rejected")
-                    out[i] = (None, "schema validation failed")
+                    if verdict.outcome is ValidationOutcome.INVALID:
+                        err = "schema validation failed"
+                    else:
+                        err = f"{verdict.outcome.value}: {verdict.reason}"
+                    out[i] = SubmitResult(None, err, verdict.outcome)
         return out  # type: ignore[return-value]
 
     def _parse(self, request_json: str, endpoint: str):
+        """Pre-validation gate: endpoint membership, payload byte guard,
+        JSON decode.  Every reject here is a REJECTED_GUARD outcome; any
+        decodable JSON value (including non-object top-levels like
+        ``"5"`` or ``"[]"``) flows through to the normal validator
+        verdict and never raises."""
         # endpoint membership first: by_endpoint buckets exist only for
         # registered endpoints (unknown names are client-controlled and
         # must not grow the stats dict without bound)
         if endpoint not in self.registry:
             self.stats.rejected += 1
+            self.stats.record_outcome(ValidationOutcome.REJECTED_GUARD)
             return None, f"unknown endpoint {endpoint!r}"
+        limit = self.registry.guard.max_bytes
+        if len(request_json) > limit:
+            self.stats.rejected += 1
+            self.stats.count(endpoint, "rejected")
+            self.stats.record_outcome(ValidationOutcome.REJECTED_GUARD)
+            return None, f"payload {len(request_json)} bytes > guard cap {limit}"
         try:
             request = json.loads(request_json)
         except json.JSONDecodeError as exc:
             self.stats.rejected += 1
             self.stats.count(endpoint, "rejected")
+            self.stats.record_outcome(ValidationOutcome.REJECTED_GUARD)
             return None, f"malformed JSON: {exc}"
+        except RecursionError:
+            # hostile nesting can exhaust json.loads's recursive decoder
+            # before any schema ever sees the document
+            self.stats.rejected += 1
+            self.stats.count(endpoint, "rejected")
+            self.stats.record_outcome(ValidationOutcome.REJECTED_GUARD)
+            return None, "malformed JSON: nesting exceeds the decode limit"
         return request, ""
 
     def _enqueue(self, request: Any, endpoint: str) -> int:
