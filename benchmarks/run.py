@@ -9,6 +9,7 @@ One module per paper table/figure:
   recursive    -- beyond-paper recursive-$ref unrolling (frontier routing)
   logical      -- beyond-paper logical-applicator circuits (tagged unions)
   robustness   -- fault-containment overhead + poisoned-batch throughput
+  observability -- trace/metric seam overhead + explain attribution cost
   roofline     -- §Roofline terms from the dry-run artifacts
 
 Prints ``name,us_per_call,derived`` CSV lines and writes the full report
@@ -34,6 +35,7 @@ def main() -> None:
         batched,
         compile_time,
         logical,
+        observability,
         recursive,
         registry,
         robustness,
@@ -50,6 +52,7 @@ def main() -> None:
         ("recursive", recursive),
         ("logical", logical),
         ("robustness", robustness),
+        ("observability", observability),
         ("roofline", roofline),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None

@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""CI perf gate: diff fresh ``results/BENCH_*.json`` against the
+committed snapshots (DESIGN.md §12).
+
+Usage (after ``python -m benchmarks.run`` has refreshed the working-tree
+results)::
+
+    python scripts/bench_gate.py [--ref HEAD] [--threshold 0.25]
+
+For every ``results/BENCH_*.json`` present in the working tree, the gate
+loads the version committed at ``--ref`` via ``git show`` and walks both
+JSON trees in parallel.  Numeric leaves whose key ends in
+``us_per_doc`` are latency-style (lower is better) and **gated**: a
+fresh value more than ``threshold`` (default 25%) above the committed
+value fails the gate.  Everything else -- counts, percentages,
+throughputs -- is informational only.
+
+Noisy fields that legitimately swing run-to-run sit on an allowlist and
+are reported but never gated:
+
+- ``traced_us_per_doc``     -- armed-tracer timing includes ring churn
+- ``total_us_per_doc``      -- poisoned-batch bisection timing
+  (BENCH_robustness) depends on fault placement
+
+Benchmarks new in this PR (present in the tree, absent at ``--ref``)
+are skipped with a note -- their first committed snapshot becomes the
+baseline for the next PR.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+from typing import Any, Iterator, List, Tuple
+
+REPO = Path(__file__).resolve().parents[1]
+RESULTS = REPO / "results"
+
+GATED_SUFFIX = "us_per_doc"
+ALLOWLIST = {"traced_us_per_doc", "total_us_per_doc"}
+
+
+def _committed(ref: str, relpath: str) -> Any:
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"{ref}:{relpath}"],
+            cwd=REPO,
+            capture_output=True,
+            check=True,
+        ).stdout
+    except subprocess.CalledProcessError:
+        return None  # not committed at ref (new benchmark)
+    return json.loads(blob)
+
+
+def _leaves(obj: Any, path: str = "") -> Iterator[Tuple[str, str, float]]:
+    """Yield (dotted_path, leaf_key, value) for every numeric leaf."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            yield from _leaves(v, f"{path}.{k}" if path else str(k))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            yield from _leaves(v, f"{path}[{i}]")
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        yield path, path.rsplit(".", 1)[-1].rsplit("[", 1)[0], float(obj)
+
+
+def gate(ref: str, threshold: float) -> int:
+    failures: List[str] = []
+    gated = skipped = 0
+    for fresh_path in sorted(RESULTS.glob("BENCH_*.json")):
+        rel = fresh_path.relative_to(REPO).as_posix()
+        fresh = json.loads(fresh_path.read_text())
+        base = _committed(ref, rel)
+        if base is None:
+            print(f"SKIP  {rel}: no snapshot at {ref} (new benchmark)")
+            skipped += 1
+            continue
+        base_leaves = {p: v for p, _, v in _leaves(base)}
+        for dotted, key, new in _leaves(fresh):
+            if not key.endswith(GATED_SUFFIX):
+                continue
+            old = base_leaves.get(dotted)
+            if old is None or old <= 0:
+                print(f"SKIP  {rel}:{dotted}: no baseline value")
+                continue
+            delta = (new - old) / old
+            tag = "ALLOW" if key in ALLOWLIST else "GATE "
+            verdict = "ok"
+            if delta > threshold:
+                if key in ALLOWLIST:
+                    verdict = "noisy (allowlisted)"
+                else:
+                    verdict = "FAIL"
+                    failures.append(
+                        f"{rel}:{dotted}: {old:.3f} -> {new:.3f} us/doc "
+                        f"(+{delta * 100:.1f}% > {threshold * 100:.0f}%)"
+                    )
+            gated += key not in ALLOWLIST
+            print(
+                f"{tag} {rel}:{dotted}: {old:.3f} -> {new:.3f} "
+                f"({delta * +100:+.1f}%) {verdict}"
+            )
+    print(
+        f"\nbench_gate: {gated} gated comparisons, {skipped} new benchmarks, "
+        f"{len(failures)} failures"
+    )
+    if failures:
+        print("\nREGRESSIONS over threshold:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--ref", default="HEAD", help="git ref holding baselines")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.25,
+        help="max tolerated fractional regression on gated keys",
+    )
+    args = ap.parse_args()
+    if not RESULTS.is_dir():
+        print("bench_gate: no results/ directory; run benchmarks first")
+        return 1
+    return gate(args.ref, args.threshold)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -60,6 +60,7 @@ the tape itself.
 from __future__ import annotations
 
 import functools
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -67,6 +68,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops as kops
+from ..obs.trace import span as _span, trace_point as _trace_point
+from .explain import KIND_CIRCUIT, FailureSite, resolve_site
 from .nodetypes import T_ARR as _T_ARR, T_OBJ as _T_OBJ
 from .outcomes import fault_hook_armed, fault_point
 from .tape import (
@@ -244,6 +247,7 @@ class BatchValidator:
         max_depth: int = 16,
         use_pallas: bool = True,
         layout: str = "csr",
+        metrics=None,
     ):
         if layout not in ("csr", "dense"):
             raise ValueError(f"unknown layout {layout!r}")
@@ -251,6 +255,28 @@ class BatchValidator:
         self.max_depth = max_depth
         self.use_pallas = use_pallas
         self.layout = layout
+        # optional MetricRegistry (obs/metrics.py): children are cached
+        # here once so the per-launch hot path is attribute adds gated on
+        # one ``is not None`` check (DESIGN.md §12)
+        self.metrics = metrics
+        if metrics is not None:
+            self._m_launches = metrics.counter(
+                "executor_launches_total", "batched kernel launches"
+            )
+            self._m_launch_seconds = metrics.counter(
+                "executor_launch_seconds_total",
+                "wall seconds inside batched launches (device sync included)",
+            )
+            self._m_recompiles = metrics.counter(
+                "executor_recompiles_total",
+                "distinct batch shapes seen (each costs one jit trace)",
+            )
+            self._m_bisect_depth = metrics.histogram(
+                "executor_bisect_depth",
+                "poison-isolation bisection depth per isolated validate",
+                buckets=tuple(float(d) for d in range(13)),
+            )
+        self._seen_shapes: set = set()
         # compile-time window bounds (clamped: the kernels need >= 1 slot)
         self.n_window = max(1, tape.max_rows_per_loc)
         self.k_cand = max(1, tape.max_hash_run)
@@ -281,6 +307,7 @@ class BatchValidator:
                 n_circuits=self.n_circuits,
             )
         )
+        self._explain_fn = None  # lazily jitted by explain_batch
 
     def validate(self, table, schema_ids=None) -> Tuple[np.ndarray, np.ndarray]:
         """Returns (valid, decided) boolean arrays of shape (B,).
@@ -313,10 +340,27 @@ class BatchValidator:
         B = table.batch
         ids = self._normalize_ids(B, schema_ids)
         cols = {k: jnp.asarray(v) for k, v in table.columns().items()}
-        valid, in_depth, frontier = self._fn(cols, jnp.asarray(ids))
-        frontier = np.asarray(frontier)
-        decided = np.asarray(in_depth) & ~frontier & np.asarray(table.ok)
-        return np.asarray(valid), decided, frontier & np.asarray(table.ok)
+        m = self.metrics
+        if m is not None:
+            # shape churn = jit re-traces: each new (B, N) pair re-traces
+            # the launch function (the power-of-two padding upstream
+            # exists to keep this set tiny)
+            shape = (B, table.max_nodes)
+            if shape not in self._seen_shapes:
+                self._seen_shapes.add(shape)
+                self._m_recompiles.inc()
+                _trace_point("executor.recompile", shape=shape)
+            t0 = time.perf_counter()
+        with _span("executor.launch"):
+            valid, in_depth, frontier = self._fn(cols, jnp.asarray(ids))
+            valid = np.asarray(valid)  # forces device sync inside the span
+            in_depth = np.asarray(in_depth)
+            frontier = np.asarray(frontier)
+        if m is not None:
+            self._m_launches.inc()
+            self._m_launch_seconds.inc(time.perf_counter() - t0)
+        decided = in_depth & ~frontier & np.asarray(table.ok)
+        return valid, decided, frontier & np.asarray(table.ok)
 
     def _normalize_ids(self, B: int, schema_ids) -> np.ndarray:
         if schema_ids is None:
@@ -362,9 +406,10 @@ class BatchValidator:
         decided = np.zeros(B, bool)
         frontier = np.zeros(B, bool)
         errors: Dict[int, str] = dict(table.errors)
-        stack: List[List[int]] = [list(range(B))]
+        stack: List[Tuple[List[int], int]] = [(list(range(B)), 0)]
+        max_bisect = 0  # deepest split reached while cornering poison
         while stack:
-            rows = stack.pop()
+            rows, bdepth = stack.pop()
             full = len(rows) == B
             # the full-batch launch reuses the caller's table/ids objects:
             # a fresh ids copy per call would defeat the executor's
@@ -380,8 +425,11 @@ class BatchValidator:
                     errors[rows[0]] = f"launch: {type(exc).__name__}: {exc}"
                     continue
                 mid = len(rows) // 2
-                stack.append(rows[mid:])
-                stack.append(rows[:mid])
+                stack.append((rows[mid:], bdepth + 1))
+                stack.append((rows[:mid], bdepth + 1))
+                if bdepth + 1 > max_bisect:
+                    max_bisect = bdepth + 1
+                    _trace_point("executor.bisect", depth=max_bisect)
                 continue
             if full:
                 valid[:] = v
@@ -391,10 +439,101 @@ class BatchValidator:
                 valid[rows] = v
                 decided[rows] = d
                 frontier[rows] = f
+        if self.metrics is not None:
+            self._m_bisect_depth.observe(float(max_bisect))
         for r in errors:
             decided[r] = False
             frontier[r] = False
         return valid, decided, frontier, errors
+
+    def explain_batch(
+        self, table, schema_ids=None, *, docs: Optional[Sequence[Any]] = None
+    ) -> List[Optional[FailureSite]]:
+        """Batched first-failure attribution (DESIGN.md §12).
+
+        Returns one entry per document: a :class:`FailureSite` where the
+        batched pipeline attributes a failure, ``None`` where it finds
+        none (the document is valid -- callers gate on their own
+        verdicts and must not call this for undecided rows).  ``docs``
+        (the original parsed documents, encode order) enables instance
+        JSON pointers; without them ``instance_path`` stays empty.
+
+        Tie-break contract: lowest BFS node first; within a node
+        assertion-row < missing-required < closed-object, and among
+        assertion rows the lowest row wins; structural failures beat
+        circuit failures anchored at the same node, and among circuits
+        the lowest circuit id wins.  Opt-in by construction -- the
+        explain launch is a separate jitted function, so ``explain=False``
+        traffic never pays for it.
+        """
+        if self.layout != "csr":
+            raise NotImplementedError("explain_batch requires the csr layout")
+        B = table.batch
+        ids = self._normalize_ids(B, schema_ids)
+        if docs is not None and len(docs) != B:
+            raise ValueError(f"{len(docs)} docs for batch of {B}")
+        if self._explain_fn is None:
+            self._explain_fn = jax.jit(
+                functools.partial(
+                    _explain_batch,
+                    consts=self._consts,
+                    max_depth=self.max_depth,
+                    max_loc_depth=self.tape.max_loc_depth,
+                    use_pallas=self.use_pallas,
+                    n_window=self.n_window,
+                    k_cand=self.k_cand,
+                    m_hat=self.m_hat,
+                    n_members=self.tape.n_members,
+                    circuits=self._circuits,
+                    n_circuits=self.n_circuits,
+                )
+            )
+        cols = {k: jnp.asarray(v) for k, v in table.columns().items()}
+        with _span("executor.explain", batch=B):
+            out = self._explain_fn(cols, jnp.asarray(ids))
+        doc_key, bad_row, bad_loc, parent_loc, missing, root_fail, root_anchor = (
+            np.asarray(x) for x in out
+        )
+        roots = _circuit_roots(self._circuits, self.n_circuits)
+        big = int(_BIG)
+        sites: List[Optional[FailureSite]] = []
+        for b in range(B):
+            doc = docs[b] if docs is not None else None
+            skey = int(doc_key[b])  # structural pick: node*4 + kind
+            ckey, circ = big, -1  # circuit pick: anchor*4 + KIND_CIRCUIT
+            for j, r in enumerate(roots):
+                if root_fail[b, j]:
+                    anchor = int(root_anchor[b, j])
+                    k = max(anchor, 0) * 4 + KIND_CIRCUIT
+                    if k < ckey:
+                        ckey, circ = k, r
+            if skey >= big and ckey >= big:
+                sites.append(None)
+                continue
+            if skey <= ckey:  # structural wins ties at the same node
+                sites.append(
+                    resolve_site(
+                        self.tape,
+                        kind=skey % 4,
+                        node=skey // 4,
+                        row=int(bad_row[b]),
+                        loc=int(bad_loc[b]),
+                        parent_loc=int(parent_loc[b]),
+                        missing_mask=int(missing[b]) & 0xFFFFFFFF,
+                        doc=doc,
+                    )
+                )
+            else:
+                sites.append(
+                    resolve_site(
+                        self.tape,
+                        kind=KIND_CIRCUIT,
+                        node=ckey // 4,
+                        circ=circ,
+                        doc=doc,
+                    )
+                )
+        return sites
 
 
 def _propagate_locations(
@@ -616,6 +755,7 @@ def _assertions_csr(
     use_pallas: bool,
     n_window: int,
     n_circuits: int,
+    detail=None,
 ):
     """Windowed assertion evaluation + segmented OR-group reduction.
 
@@ -623,7 +763,9 @@ def _assertions_csr(
     *plain* rows (rows wired to a circuit are excluded from the plain
     reduction), plus the raw window pass matrix and per-window segmented
     group OR for the caller's circuit-leaf gathers (None without
-    circuits).
+    circuits).  ``detail`` (a dict, explain path only) receives the
+    per-window intermediates so the first-failure pass can argmax over
+    them without recomputing.
     """
     A = consts["asrt_op"].shape[0]
     tracked = loc >= 0
@@ -662,6 +804,15 @@ def _assertions_csr(
     or_ok = jnp.all(jnp.where(is_start & ~in_circ, seg_any, True), axis=1)
     asrt_ok = and_ok & or_ok
 
+    if detail is not None:
+        detail.update(
+            w_rows=w_rows,
+            passes=passes,
+            in_circ=in_circ,
+            is_and=is_and,
+            is_start=is_start,
+            seg_any=seg_any,
+        )
     if not n_circuits:
         return asrt_ok, None, None
     return asrt_ok, passes, seg_any
@@ -729,7 +880,7 @@ def _circuit_presence(node_at, circuits):
     return node_at[:, np.asarray(circuits["circ_ranks"], np.int32)] >= 0
 
 
-def _reduce_circuits(leaf_vals, present, circuits, *, n_circuits: int):
+def _reduce_circuits(leaf_vals, present, circuits, *, n_circuits: int, roots_out=None):
     """Bottom-up circuit reduce -> (B,) root conjunction.
 
     ``leaf_vals`` maps circuit ids to their per-document leaf values
@@ -781,6 +932,12 @@ def _reduce_circuits(leaf_vals, present, circuits, *, n_circuits: int):
     ok = jnp.ones(B, bool)
     for r in roots:
         ok = ok & vals[r]
+    if roots_out is not None:  # explain path: per-root gated values (B, R)
+        roots_out.append(
+            jnp.stack([vals[r] for r in roots], axis=1)
+            if roots
+            else jnp.zeros((B, 0), bool)
+        )
     return ok
 
 
@@ -967,3 +1124,147 @@ def _validate_batch(
     else:
         frontier = jnp.zeros(B, bool)
     return valid, in_depth, frontier
+
+
+def _circuit_roots(circuits, n_circuits: int) -> List[int]:
+    """Root circuit ids in ascending order (compile-time)."""
+    parent = circuits["parent"]
+    return [c for c in range(n_circuits) if int(parent[c]) < 0]
+
+
+def _explain_batch(
+    cols,
+    schema_ids,
+    *,
+    consts,
+    max_depth: int,
+    max_loc_depth: int,
+    use_pallas: bool,
+    n_window: int,
+    k_cand: int,
+    m_hat: int,
+    n_members: int,
+    circuits=None,
+    n_circuits: int = 0,
+):
+    """Device half of batched first-failure attribution (DESIGN.md §12).
+
+    Re-runs the CSR validation pipeline keeping the per-window
+    intermediates, then reduces every document to ONE failure pick:
+
+    - per node, the lowest failing assertion row (a failed AND row fails
+      at its own row; a failed enum OR-group at its first window row);
+    - per document, an argmin over packed ``node*4 + kind`` keys, so the
+      lowest BFS node wins and, within a node, assertion (0) beats
+      missing-required (1) beats closed-object (2);
+    - circuit failures come back separately as per-root gated values +
+      the root owner's anchor node; the host merges them in as kind 3.
+
+    Returns ``(doc_key, bad_row, bad_loc, parent_loc, missing,
+    root_fail, root_anchor)`` -- all small (B,)/(B, R) tensors; the
+    provenance mapping happens on the host (``core/explain.py``).
+    """
+    tape_horizon = max_loc_depth + 1
+    loop_depth = min(max_depth, tape_horizon)
+    loc, acquired, aux = _propagate_locations(
+        cols,
+        schema_ids,
+        consts,
+        loop_depth=loop_depth,
+        use_pallas=use_pallas,
+        layout="csr",
+        k_cand=k_cand,
+        m_hat=m_hat,
+        n_members=n_members,
+    )
+    node_type = aux["node_type"]
+    is_pad = aux["is_pad"]
+    flat = aux["flat"]
+    B, N = aux["B"], aux["N"]
+
+    tracked = loc >= 0
+    loc_safe = jnp.where(tracked, loc, 0)
+    required_mask = jnp.where(
+        tracked & (node_type == _T_OBJ), consts["loc_required_mask"][loc_safe], 0
+    )
+    required_ok = (acquired & required_mask) == required_mask
+
+    node_cols = {
+        "type": node_type,
+        "is_int": flat(cols["is_int"]),
+        "num": flat(cols["num"]).astype(jnp.float32),
+        "size": flat(cols["size"]),
+        "acquired": acquired,
+        "str_hash": flat(cols["str_hash"]),
+        "str_prefix": flat(cols["str_prefix"]),
+    }
+    detail: Dict[str, Any] = {}
+    _asrt_ok, w_passes, w_seg_any = _assertions_csr(
+        loc,
+        node_cols,
+        consts,
+        use_pallas=use_pallas,
+        n_window=n_window,
+        n_circuits=n_circuits,
+        detail=detail,
+    )
+
+    # per-node first failing plain assertion row (global row id)
+    fail_and = detail["is_and"] & ~detail["passes"]
+    fail_or = detail["is_start"] & ~detail["in_circ"] & ~detail["seg_any"]
+    row_masked = jnp.where(fail_and | fail_or, detail["w_rows"], _BIG)
+    node_first_row = jnp.min(row_masked, axis=1)  # (BN,)
+    has_row_fail = node_first_row < _BIG
+
+    req_fail = tracked & ~required_ok
+    closed_fail = loc == jnp.int32(LOC_INVALID)
+    node_fail = ~is_pad & (has_row_fail | req_fail | closed_fail)
+    kind = jnp.where(has_row_fail, 0, jnp.where(req_fail, 1, 2))
+
+    # packed argmin: lowest BFS node, then kind priority within the node
+    n_in_doc = jnp.arange(B * N, dtype=jnp.int32) % N
+    key = jnp.where(node_fail, n_in_doc * 4 + kind, _BIG)
+    doc_key = jnp.min(key.reshape(B, N), axis=1)  # (B,)
+
+    picked = doc_key < _BIG
+    node_pick = jnp.where(picked, doc_key // 4, 0)
+    chosen_flat = jnp.arange(B, dtype=jnp.int32) * N + node_pick
+    bad_row = jnp.where(picked, node_first_row[chosen_flat], -1)
+    bad_loc = jnp.where(picked, loc[chosen_flat], -1)
+    missing = jnp.where(picked, (required_mask & ~acquired)[chosen_flat], 0)
+    parent = flat(cols["parent"])
+    par = parent[chosen_flat]  # (B,) in-document parent index
+    par_flat = jnp.where(par >= 0, jnp.arange(B, dtype=jnp.int32) * N + par, 0)
+    parent_loc = jnp.where(picked & (par >= 0), loc[par_flat], -1)
+
+    if n_circuits:
+        node_at = _circuit_anchors(loc, circuits, B, N)
+        leaf_vals = _leaf_values(
+            node_at,
+            circuits,
+            B,
+            N,
+            and_mat=w_passes,
+            group_mat=w_seg_any,
+            and_cols=[u[3] for u in circuits["and_units"]],
+            group_cols=[u[3] for u in circuits["group_units"]],
+        )
+        present = _circuit_presence(node_at, circuits)
+        roots_out: List[Any] = []
+        _reduce_circuits(
+            leaf_vals,
+            present,
+            circuits,
+            n_circuits=n_circuits,
+            roots_out=roots_out,
+        )
+        root_fail = ~roots_out[0]  # (B, R): gated root value False = fail
+        roots = _circuit_roots(circuits, n_circuits)
+        rank_cols = np.asarray(
+            [int(circuits["circ_ranks"][r]) for r in roots], np.int32
+        )
+        root_anchor = node_at[:, rank_cols]  # (B, R) in-doc anchor, -1 absent
+    else:
+        root_fail = jnp.zeros((B, 0), bool)
+        root_anchor = jnp.zeros((B, 0), jnp.int32)
+    return doc_key, bad_row, bad_loc, parent_loc, missing, root_fail, root_anchor

@@ -69,12 +69,19 @@ class ValidationOutcome(str, Enum):
 
 @dataclass(frozen=True)
 class Verdict:
-    """Structured per-document admission result."""
+    """Structured per-document admission result.
+
+    ``site`` is populated only on INVALID verdicts from an
+    ``explain=True`` admission: a ``core.explain.FailureSite`` naming
+    the violated schema location, keyword, and instance JSON pointer
+    (first failure under the tie-break contract of DESIGN.md §12).
+    """
 
     outcome: ValidationOutcome
     valid: bool
     reason: str = ""
     engine: str = ""  # "batched" | "sequential" | "" (no engine ran)
+    site: Any = None  # FailureSite | None (explain=True INVALID only)
 
     @property
     def admitted(self) -> bool:

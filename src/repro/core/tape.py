@@ -197,6 +197,11 @@ class _Loc:
     # or must re-route to / raise against an additionalProperties scope)
     closed_exempt: Optional[Set[str]] = None
     addl_exempt: Optional[Set[str]] = None
+    # provenance for first-failure attribution (DESIGN.md §12):
+    # key -> source schema path of the requiring keyword, and the path of
+    # the closing (additionalProperties: false) scope
+    required_paths: Dict[str, str] = field(default_factory=dict)
+    closed_path: str = ""
 
 
 @dataclass
@@ -296,6 +301,16 @@ class LocationTape:
     circ_owner: Optional[np.ndarray] = None  # int32 (C,)  owner location
     circ_level: Optional[np.ndarray] = None  # int32 (C,)
     max_circ_depth: int = 0
+    # -- provenance sidecars for first-failure attribution (DESIGN.md §12)
+    # Host-side only (tuples, never shipped to the device): the source
+    # schema path per assertion row (aligned with the owner-sorted order),
+    # per-location required-slot provenance ((slot, key, path) triples),
+    # the path of the closing scope per location, and the path of the
+    # originating applicator per circuit node.
+    asrt_path: Optional[Tuple[str, ...]] = None  # (A,)
+    loc_required_info: Optional[Tuple[Tuple[Tuple[int, str, str], ...], ...]] = None  # (L,)
+    loc_closed_path: Optional[Tuple[str, ...]] = None  # (L,)
+    circ_path: Optional[Tuple[str, ...]] = None  # (C,)
 
     def __post_init__(self) -> None:
         if self.psort_member is None:
@@ -323,6 +338,14 @@ class LocationTape:
             self.circ_owner = np.zeros(0, np.int32)
         if self.circ_level is None:
             self.circ_level = np.zeros(0, np.int32)
+        if self.asrt_path is None:
+            self.asrt_path = ("",) * len(self.asrt_owner)
+        if self.loc_required_info is None:
+            self.loc_required_info = ((),) * len(self.loc_closed)
+        if self.loc_closed_path is None:
+            self.loc_closed_path = ("",) * len(self.loc_closed)
+        if self.circ_path is None:
+            self.circ_path = ("",) * len(self.circ_kind)
 
     @property
     def n_props(self) -> int:
@@ -369,7 +392,12 @@ class _TapeBuilder:
         self.circ_kind: List[int] = []
         self.circ_parent: List[int] = []
         self.circ_owner: List[int] = []
+        self.circ_path: List[str] = []
         self._circ_ctx: int = -1
+        # source schema path of the instruction currently lowering --
+        # synthesized instructions (empty schema_path) inherit the
+        # enclosing applicator's path (DESIGN.md §12)
+        self._cur_path: str = ""
 
     # -- circuits (DESIGN.md §10) --------------------------------------
 
@@ -378,6 +406,7 @@ class _TapeBuilder:
         self.circ_kind.append(kind)
         self.circ_parent.append(self._circ_ctx if parent is None else parent)
         self.circ_owner.append(loc.index)
+        self.circ_path.append(self._cur_path)
         return cid
 
     def circuit_group(self, instructions: Instructions, loc: _Loc, node: int) -> None:
@@ -473,6 +502,7 @@ class _TapeBuilder:
         """
         if hard:
             loc.hard_keys.add(key)
+        loc.required_paths.setdefault(key, self._cur_path)
         if key in loc.required_slots:
             return loc.required_slots[key]
         slot = len(loc.required_slots)
@@ -506,6 +536,7 @@ class _TapeBuilder:
                 u0=int(u0),
                 u1=int(u1),
                 lanes=np.zeros(8, np.uint32) if lanes is None else lanes,
+                path=self._cur_path,
             )
         )
 
@@ -536,7 +567,13 @@ class _TapeBuilder:
         handler = _HANDLERS.get(op)
         if handler is None:
             raise UnsupportedForBatch(f"instruction {op.name} not batchable")
-        handler(self, inst, target)
+        prev_path = self._cur_path
+        if inst.schema_path:
+            self._cur_path = inst.schema_path
+        try:
+            handler(self, inst, target)
+        finally:
+            self._cur_path = prev_path
 
     # -- finalize ------------------------------------------------------------
 
@@ -544,6 +581,8 @@ class _TapeBuilder:
         ks = set(keys)
         loc.closed_exempt = ks if loc.closed_exempt is None else (loc.closed_exempt & ks)
         loc.closed = True
+        if not loc.closed_path:
+            loc.closed_path = self._cur_path
 
     def _note_addl_exempt(self, loc: _Loc, keys) -> None:
         ks = set(keys)
@@ -753,6 +792,22 @@ class _TapeBuilder:
             max_circ_depth=int(circ_level.max()) if C else 0,
             loc_frontier=frontier_mask,
             unroll_depth=self.unroll_depth if self.labels else 0,
+            # provenance sidecars (DESIGN.md §12); ``asrt_rows`` is already
+            # in the owner-sorted order, so the path tuple aligns with the
+            # CSR row arrays
+            asrt_path=tuple(r.get("path", "") for r in asrt_rows) or ("",),
+            loc_required_info=tuple(
+                tuple(
+                    sorted(
+                        (slot, key, l.required_paths.get(key, ""))
+                        for key, slot in l.required_slots.items()
+                    )
+                )
+                for l in self.locs
+            )
+            or ((),),
+            loc_closed_path=tuple(l.closed_path for l in self.locs) or ("",),
+            circ_path=tuple(self.circ_path),
         )
         return tape
 

@@ -15,39 +15,50 @@ coordination service required -- the 1000-node-friendly choice).
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
 from ..core import Validator
 from ..core.outcomes import Verdict
+from ..obs.stats import RegistryBackedStats
 from ..registry import SchemaRegistry
 from . import tokenizer
 from .doc_table import encode_batch
 
 
-@dataclass
-class PipelineStats:
-    seen: int = 0
-    admitted: int = 0
-    rejected: int = 0
-    batch_validated: int = 0
-    fallback_validated: int = 0
-    # batchable records the depth-budgeted executor could not decide
-    # (routed to the sequential oracle) -- observable, never silent.
-    # ``oversize`` separately counts encoder-budget (max_nodes/max_depth)
-    # overflows and ``unroll_overflow`` counts documents whose recursion
-    # outran the tape's $ref-unroll budget, so the three fallback causes
-    # are distinguishable
-    undecided: int = 0
-    oversize: int = 0
-    unroll_overflow: int = 0
-    # fault-containment dispositions (DESIGN.md §11); all are rejects
-    rejected_guard: int = 0
-    error_isolated: int = 0
-    timed_out: int = 0
-    breaker_open: int = 0
+class PipelineStats(RegistryBackedStats):
+    """Admission counters, registry-backed (DESIGN.md §12).
+
+    Attribute API unchanged; every field is a live counter child of a
+    shared :class:`~repro.obs.metrics.MetricRegistry`, with
+    ``snapshot()``/``reset()`` from the base.
+    """
+
+    PREFIX = "pipeline_"
+    INT_FIELDS = (
+        "seen",
+        "admitted",
+        "rejected",
+        "batch_validated",
+        "fallback_validated",
+        # batchable records the depth-budgeted executor could not decide
+        # (routed to the sequential oracle) -- observable, never silent.
+        # ``oversize`` separately counts encoder-budget
+        # (max_nodes/max_depth) overflows and ``unroll_overflow`` counts
+        # documents whose recursion outran the tape's $ref-unroll
+        # budget, so the three fallback causes are distinguishable
+        "undecided",
+        "oversize",
+        "unroll_overflow",
+        # fault-containment dispositions (DESIGN.md §11); all are rejects
+        "rejected_guard",
+        "error_isolated",
+        "timed_out",
+        "breaker_open",
+    )
+    HELP = {"seen": "records seen by the admission controller"}
 
 
 class AdmissionController:
@@ -88,7 +99,7 @@ class AdmissionController:
             raise ValueError(
                 f"no schema given and endpoint {endpoint!r} not in the registry"
             )
-        self.stats = PipelineStats()
+        self.stats = PipelineStats(registry.metrics)
 
     # -- back-compat accessors (single-tenant view of the registry) ----------
 
@@ -156,16 +167,22 @@ class AdmissionController:
         endpoints: Optional[List[str]] = None,
         *,
         keys: Optional[List[Any]] = None,
+        explain: bool = False,
     ) -> List[Verdict]:
         """Fault-contained admission through the registry's containment
         ladder (guards -> isolated batched launch -> bounded fallback);
         one structured :class:`Verdict` per record, and ``seen`` always
-        equals the sum of all disposition counters."""
+        equals the sum of all disposition counters.  ``explain=True``
+        opts INVALID verdicts into first-failure attribution."""
         if endpoints is None:
             endpoints = [self.endpoint] * len(records)
         self.stats.seen += len(records)
         verdicts, counts = self.registry.admit_mixed_ex(
-            records, endpoints, max_nodes=self.batch_max_nodes, keys=keys
+            records,
+            endpoints,
+            max_nodes=self.batch_max_nodes,
+            keys=keys,
+            explain=explain,
         )
         self.stats.batch_validated += counts.batch_validated
         self.stats.undecided += counts.undecided

@@ -1,0 +1,40 @@
+"""Serving observability: tracing spans + metric registry (DESIGN.md §12).
+
+Zero-dependency by design -- the serve stack imports this package
+unconditionally, so it must cost nothing when disarmed: ``span()``/
+``trace_point()`` pay one module-global ``None`` check (the
+``fault_point`` contract), and registry-backed counters are plain
+attribute adds.
+"""
+
+from .metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricRegistry,
+    DEFAULT_LATENCY_BUCKETS,
+)
+from .stats import RegistryBackedStats
+from .trace import (
+    Span,
+    Tracer,
+    set_tracer,
+    span,
+    trace_point,
+    tracer_armed,
+)
+
+__all__ = [
+    "RegistryBackedStats",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricRegistry",
+    "DEFAULT_LATENCY_BUCKETS",
+    "Span",
+    "Tracer",
+    "set_tracer",
+    "span",
+    "trace_point",
+    "tracer_armed",
+]

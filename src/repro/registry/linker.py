@@ -148,6 +148,12 @@ class TapeSegment:
     circ_owner: np.ndarray
     circ_level: np.ndarray
     max_circ_depth: int
+    # provenance sidecars for first-failure attribution (DESIGN.md §12);
+    # host-side tuples, aligned with the real rows above
+    asrt_path: Tuple[str, ...] = ()
+    loc_required_info: Tuple[Tuple[Tuple[int, str, str], ...], ...] = ()
+    loc_closed_path: Tuple[str, ...] = ()
+    circ_path: Tuple[str, ...] = ()
 
     @property
     def n_circuits(self) -> int:
@@ -218,6 +224,12 @@ def segment_tape(tape: LocationTape) -> TapeSegment:
         circ_owner=tape.circ_owner,
         circ_level=tape.circ_level,
         max_circ_depth=tape.max_circ_depth,
+        asrt_path=tuple(
+            p for p, r in zip(tape.asrt_path, real_a) if r
+        ),
+        loc_required_info=tuple(tape.loc_required_info),
+        loc_closed_path=tuple(tape.loc_closed_path),
+        circ_path=tuple(tape.circ_path),
     )
 
 
@@ -346,6 +358,11 @@ def link_tapes(
         circ_owner=circ_owner,
         circ_level=circ_level,
         max_circ_depth=max(s.max_circ_depth for s in segments),
+        # provenance sidecars concatenate alongside their row tables
+        asrt_path=sum((s.asrt_path for s in segments), ()),
+        loc_required_info=sum((s.loc_required_info for s in segments), ()),
+        loc_closed_path=sum((s.loc_closed_path for s in segments), ()),
+        circ_path=sum((s.circ_path for s in segments), ()),
     )
 
     # empty-table placeholders, mirroring _TapeBuilder.build(): the
@@ -376,6 +393,7 @@ def link_tapes(
             asrt_u1=np.zeros(1, np.uint32),
             asrt_hash=np.zeros((1, 8), np.uint32),
             asrt_circ=np.full(1, -1, np.int32),
+            asrt_path=("",),
         )
     if linked["prefix_loc"].size == 0:
         linked["prefix_loc"] = np.full(1, -1, np.int32)

@@ -51,7 +51,10 @@ from ..core.outcomes import (
     fault_point,
     resource_guard,
 )
+from ..core.explain import FailureSite, keyword_of
 from ..core.tape import DEFAULT_UNROLL_DEPTH, LocationTape, try_build_tape
+from ..obs.metrics import MetricRegistry
+from ..obs.trace import span as _span
 from .linker import LinkedTape, TapeSegment, link_tapes, segment_tape
 
 __all__ = [
@@ -136,6 +139,7 @@ class SchemaRegistry:
         fallback_max_steps: int = 500_000,
         fallback_deadline_s: Optional[float] = 0.25,
         clock: Callable[[], float] = time.monotonic,
+        metrics: Optional[MetricRegistry] = None,
     ):
         self.engine = engine
         self.use_pallas = use_pallas
@@ -151,6 +155,20 @@ class SchemaRegistry:
         self.fallback_max_steps = fallback_max_steps
         self.fallback_deadline_s = fallback_deadline_s
         self.clock = clock
+        # control-plane + executor telemetry (DESIGN.md §12): one registry
+        # shared with the serving layers; callers may pass theirs in
+        self.metrics = metrics if metrics is not None else MetricRegistry()
+        self._m_register_seconds = self.metrics.counter(
+            "registry_register_seconds_total",
+            "wall seconds inside register() (compile + tape + verify + link)",
+        )
+        self._m_relink_seconds = self.metrics.counter(
+            "registry_relink_seconds_total",
+            "wall seconds re-cutting the linked tape (control plane)",
+        )
+        self._m_relinks = self.metrics.counter(
+            "registry_relinks_total", "linked-tape re-cuts (membership changes)"
+        )
         self._breakers: Dict[str, CircuitBreaker] = {}
         self._swap_failures: Dict[str, str] = {}
         self._entries: Dict[str, Dict[int, SchemaEntry]] = {}
@@ -205,6 +223,7 @@ class SchemaRegistry:
         # the dict they registered cannot corrupt (or no-op-skip) later
         # registrations against the served version
         schema = copy.deepcopy(schema)
+        t_reg = time.perf_counter()
         # -- build (no state mutated on failure) ------------------------------
         try:
             t0 = time.perf_counter()
@@ -269,9 +288,16 @@ class SchemaRegistry:
         self._swap_failures.pop(endpoint, None)
         self._generation += 1
         self._relink()  # eager: keep re-link cost off the serving path
+        self._m_register_seconds.inc(time.perf_counter() - t_reg)
+        self.metrics.counter(
+            "registry_swap_total", "registration swaps by result", result="ok"
+        ).inc()
         return entry
 
     def _swap_failed(self, endpoint: str, reason: str) -> RegistrationError:
+        self.metrics.counter(
+            "registry_swap_total", "registration swaps by result", result="failed"
+        ).inc()
         self._swap_failures[endpoint] = reason
         serving = ""
         if endpoint in self._active:
@@ -434,20 +460,25 @@ class SchemaRegistry:
             # membership unchanged: keep the jitted validator alive
             self._linked_generation = self._generation
             return
-        if members:
-            self._linked = link_tapes(segments=segments, names=members)
-            self._linked_validator = BatchValidator(
-                self._linked,
-                max_depth=self.max_depth,
-                use_pallas=self.use_pallas,
-                layout=self.layout,
-            )
-        else:
-            self._linked = None
-            self._linked_validator = None
+        t0 = time.perf_counter()
+        with _span("registry.relink", members=len(members)):
+            if members:
+                self._linked = link_tapes(segments=segments, names=members)
+                self._linked_validator = BatchValidator(
+                    self._linked,
+                    max_depth=self.max_depth,
+                    use_pallas=self.use_pallas,
+                    layout=self.layout,
+                    metrics=self.metrics,
+                )
+            else:
+                self._linked = None
+                self._linked_validator = None
         self._member_index = {m: i for i, m in enumerate(members)}
         self._linked_signature = signature
         self._linked_generation = self._generation
+        self._m_relinks.inc()
+        self._m_relink_seconds.inc(time.perf_counter() - t0)
 
     def linked_tape(self) -> Optional[LinkedTape]:
         """The linked tape over all batchable serving versions (or None)."""
@@ -517,6 +548,7 @@ class SchemaRegistry:
         *,
         max_nodes: int = 256,
         keys: Optional[Sequence[Any]] = None,
+        explain: bool = False,
     ) -> Tuple[List[Verdict], "AdmitCounts"]:
         """Full mixed-stream admission: one linked launch + routed fallback.
 
@@ -535,6 +567,13 @@ class SchemaRegistry:
         to the row index).  Returns per-row :class:`Verdict`s plus
         counters; the serving engine and the pipeline admission
         controller share this path.
+
+        ``explain=True`` opts into first-failure attribution (DESIGN.md
+        §12): INVALID verdicts carry a ``FailureSite`` on ``.site`` and
+        a rendered reason.  Batched rows pay one extra (separate) explain
+        launch over the already-encoded table; sequential rows re-run
+        the diagnostic interpreter.  ``explain=False`` traffic pays
+        nothing -- the fast path is unchanged.
         """
         if len(endpoints) != len(docs):
             raise ValueError(f"{len(endpoints)} endpoints for {len(docs)} docs")
@@ -545,11 +584,14 @@ class SchemaRegistry:
             raise ValueError(f"{len(row_keys)} keys for {len(docs)} docs")
         verdicts: List[Optional[Verdict]] = [None] * len(docs)
         counts = AdmitCounts()
-        for i, doc in enumerate(docs):
-            why = resource_guard(doc, self.guard)
-            if why:
-                verdicts[i] = Verdict(ValidationOutcome.REJECTED_GUARD, False, why)
-                counts.rejected_guard += 1
+        with _span("registry.guard", batch=len(docs)):
+            for i, doc in enumerate(docs):
+                why = resource_guard(doc, self.guard)
+                if why:
+                    verdicts[i] = Verdict(
+                        ValidationOutcome.REJECTED_GUARD, False, why
+                    )
+                    counts.rejected_guard += 1
         ids = self.schema_ids(endpoints)
         fast = [
             i for i in range(len(docs)) if ids[i] >= 0 and verdicts[i] is None
@@ -566,17 +608,34 @@ class SchemaRegistry:
             fast_keys = [row_keys[i] for i in fast] + [
                 ("__pad__", j) for j in range(pad)
             ]
-            table = encode_batch(
-                [docs[i] for i in fast] + [None] * pad,
-                max_nodes=max_nodes,
-                isolate=True,
-                keys=fast_keys,
-            )
+            with _span("registry.encode", batch=bucket):
+                table = encode_batch(
+                    [docs[i] for i in fast] + [None] * pad,
+                    max_nodes=max_nodes,
+                    isolate=True,
+                    keys=fast_keys,
+                )
             pad_ids = np.concatenate([ids[fast], np.zeros(pad, np.int32)])
             bv = self.batch_validator()
             valid, decided, frontier, errors = bv.validate_isolated(
                 table, pad_ids.astype(np.int32), keys=fast_keys
             )
+            sites: List[Optional[FailureSite]] = []
+            if explain and any(
+                decided[j] and not valid[j] and j not in errors
+                for j in range(len(fast))
+            ):
+                # opt-in second launch over the same encoded table: the
+                # argmax over per-row failures (core/explain.py); rows we
+                # don't attribute below are simply ignored
+                try:
+                    sites = bv.explain_batch(
+                        table,
+                        pad_ids.astype(np.int32),
+                        docs=[docs[i] for i in fast] + [None] * pad,
+                    )
+                except Exception:
+                    sites = []  # attribution is best-effort diagnostics
             for j, i in enumerate(fast):
                 if j in errors:
                     verdicts[i] = Verdict(
@@ -588,13 +647,21 @@ class SchemaRegistry:
                     counts.error_isolated += 1
                 elif decided[j]:
                     ok = bool(valid[j])
+                    site = None if ok or j >= len(sites) else sites[j]
                     verdicts[i] = Verdict(
                         ValidationOutcome.ADMITTED
                         if ok
                         else ValidationOutcome.INVALID,
                         ok,
-                        "" if ok else "schema validation failed",
+                        ""
+                        if ok
+                        else (
+                            site.render()
+                            if site is not None
+                            else "schema validation failed"
+                        ),
                         "batched",
+                        site,
                     )
                     counts.batch_validated += 1
                 elif not table.ok[j]:
@@ -605,7 +672,9 @@ class SchemaRegistry:
                     counts.undecided += 1  # executor depth budget
         for i in range(len(docs)):
             if verdicts[i] is None:
-                v = self._bounded_fallback(endpoints[i], docs[i], row_keys[i])
+                v = self._bounded_fallback(
+                    endpoints[i], docs[i], row_keys[i], explain=explain
+                )
                 verdicts[i] = v
                 if v.outcome in (
                     ValidationOutcome.ADMITTED,
@@ -622,6 +691,8 @@ class SchemaRegistry:
 
     # -- bounded sequential fallback (the second degradation rung) -----------
 
+    _BREAKER_STATES = {"closed": 0, "half_open": 1, "open": 2}
+
     def breaker(self, endpoint: str) -> CircuitBreaker:
         """The endpoint's fallback circuit breaker (created on first use)."""
         b = self._breakers.get(endpoint)
@@ -631,9 +702,30 @@ class SchemaRegistry:
             )
         return b
 
-    def _bounded_fallback(self, endpoint: str, doc: Any, key: Any) -> Verdict:
+    def _breaker_gauge(self, endpoint: str, breaker: CircuitBreaker) -> None:
+        self.metrics.gauge(
+            "breaker_state",
+            "fallback breaker per endpoint (0=closed 1=half_open 2=open)",
+            endpoint=endpoint,
+        ).set(self._BREAKER_STATES.get(breaker.state, -1))
+
+    def _explain_sequential(self, endpoint: str, doc: Any) -> Optional[FailureSite]:
+        """Innermost sequential trace entry as a FailureSite (best-effort)."""
+        try:
+            ok, trace = self.get(endpoint).validator.explain(doc)
+        except Exception:
+            return None
+        if ok or not trace:
+            return None
+        path, _instr = trace[0]  # innermost failure first
+        return FailureSite(path, keyword_of(path))
+
+    def _bounded_fallback(
+        self, endpoint: str, doc: Any, key: Any, *, explain: bool = False
+    ) -> Verdict:
         breaker = self.breaker(endpoint)
         if not breaker.allow():
+            self._breaker_gauge(endpoint, breaker)
             return Verdict(
                 ValidationOutcome.UNDECIDED_FALLBACK,
                 False,
@@ -646,9 +738,13 @@ class SchemaRegistry:
                 deadline_s=self.fallback_deadline_s,
                 clock=self.clock,
             )
-            ok = self.get(endpoint).validator.is_valid_bounded(doc, budget=budget)
+            with _span("registry.fallback", endpoint=endpoint):
+                ok = self.get(endpoint).validator.is_valid_bounded(
+                    doc, budget=budget
+                )
         except (ValidationTimeout, DocumentDepthError) as exc:
             breaker.record_timeout()
+            self._breaker_gauge(endpoint, breaker)
             return Verdict(
                 ValidationOutcome.TIMED_OUT, False, str(exc), "sequential"
             )
@@ -662,14 +758,25 @@ class SchemaRegistry:
                 "sequential",
             )
         breaker.record_success()
+        self._breaker_gauge(endpoint, breaker)
+        site = None
+        if not ok and explain:
+            # opt-in diagnostics: re-run the (unbounded) trace interpreter
+            # on a document the bounded oracle already completed once
+            site = self._explain_sequential(endpoint, doc)
         return Verdict(
             ValidationOutcome.ADMITTED if ok else ValidationOutcome.INVALID,
             ok,
-            "" if ok else "schema validation failed",
+            ""
+            if ok
+            else (site.render() if site is not None else "schema validation failed"),
             "sequential",
+            site,
         )
 
-    def validate_one(self, endpoint: str, doc: Any, *, key: Any = None) -> Verdict:
+    def validate_one(
+        self, endpoint: str, doc: Any, *, key: Any = None, explain: bool = False
+    ) -> Verdict:
         """Single-document admission through the same containment ladder:
         resource guard, then the breaker-gated bounded fallback."""
         self.get(endpoint)  # KeyError on unknown endpoints
@@ -677,5 +784,5 @@ class SchemaRegistry:
         if why:
             return Verdict(ValidationOutcome.REJECTED_GUARD, False, why)
         return self._bounded_fallback(
-            endpoint, doc, key if key is not None else endpoint
+            endpoint, doc, key if key is not None else endpoint, explain=explain
         )

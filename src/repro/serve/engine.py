@@ -32,6 +32,9 @@ from ..core.outcomes import ValidationOutcome
 from ..data import tokenizer
 from ..models.config import ArchConfig
 from ..models.model import Model
+from ..obs.metrics import DEFAULT_LATENCY_BUCKETS, Histogram, MetricRegistry
+from ..obs.stats import RegistryBackedStats
+from ..obs.trace import span as _span
 from ..registry import SchemaRegistry
 from ..registry.registry import RegistrationError
 
@@ -101,36 +104,101 @@ class SubmitResult(tuple):
         return self[1]
 
 
-@dataclass
-class ServeStats:
-    received: int = 0
-    rejected: int = 0
-    admitted: int = 0
-    completed: int = 0
-    validation_seconds: float = 0.0
-    decode_steps: int = 0
-    batch_validated: int = 0  # verdicts from the linked-tape launch
-    fallback_validated: int = 0  # sequential (unbatchable or undecided)
-    validated_only: int = 0  # admitted without a decodable text field
-    # why batchable rows fell back (distinct causes, never conflated):
-    undecided: int = 0  # executor depth budget
-    oversize: int = 0  # encoder node budget
-    unroll_overflow: int = 0  # $ref-unroll frontier reached
-    by_endpoint: Dict[str, Dict[str, int]] = field(default_factory=dict)
-    # endpoint -> real try_build_tape failure reason (endpoints outside
-    # the structural subset; recorded at registration, not a generic
-    # "fallback" flag)
-    fallback_reasons: Dict[str, str] = field(default_factory=dict)
-    # terminal disposition per received document (DESIGN.md §11): one
-    # ValidationOutcome value each, so received == sum(outcomes.values())
-    outcomes: Dict[str, int] = field(default_factory=dict)
+class ServeStats(RegistryBackedStats):
+    """Serving counters, registry-backed (DESIGN.md §12).
+
+    The attribute API is unchanged (``stats.received``,
+    ``stats.by_endpoint`` ...) but every field is now a live child of a
+    :class:`~repro.obs.metrics.MetricRegistry` -- one
+    ``render_prometheus()`` exports the whole serving surface.
+    ``outcomes`` pre-populates every :class:`ValidationOutcome` key with
+    0, so reconciliation (``received == sum(outcomes.values())``) reads
+    the same whether or not an outcome has occurred yet.
+    """
+
+    PREFIX = "serve_"
+    INT_FIELDS = (
+        "received",
+        "rejected",
+        "admitted",
+        "completed",
+        "decode_steps",
+        "batch_validated",  # verdicts from the linked-tape launch
+        "fallback_validated",  # sequential (unbatchable or undecided)
+        "validated_only",  # admitted without a decodable text field
+        # why batchable rows fell back (distinct causes, never conflated):
+        "undecided",  # executor depth budget
+        "oversize",  # encoder node budget
+        "unroll_overflow",  # $ref-unroll frontier reached
+    )
+    FLOAT_FIELDS = ("validation_seconds",)
+    HELP = {
+        "received": "requests received (exactly one outcome each)",
+        "validation_seconds": "wall seconds inside admission validation",
+    }
+
+    def __init__(self, metrics: Optional[MetricRegistry] = None):
+        super().__init__(metrics)
+        # endpoint -> real try_build_tape failure reason (registration-
+        # time info, not traffic): a plain dict that survives reset()
+        self.fallback_reasons: Dict[str, str] = {}
+        # terminal disposition per received document (DESIGN.md §11):
+        # one ValidationOutcome value each -- pre-created so the view
+        # always carries every key
+        self._outcome_c = {
+            o.value: self._track(
+                self.metrics.counter(
+                    "serve_outcomes_total",
+                    "terminal dispositions by outcome",
+                    outcome=o.value,
+                )
+            )
+            for o in ValidationOutcome
+        }
+        self._ep_c: Dict[str, Dict[str, Any]] = {}
+
+    @property
+    def outcomes(self) -> Dict[str, int]:
+        """outcome value -> count; all ValidationOutcome keys present."""
+        return {k: int(c.value) for k, c in self._outcome_c.items()}
+
+    @property
+    def by_endpoint(self) -> Dict[str, Dict[str, int]]:
+        return {
+            e: {r: int(c.value) for r, c in per.items()}
+            for e, per in self._ep_c.items()
+        }
+
+    def _ep(self, endpoint: str) -> Dict[str, Any]:
+        per = self._ep_c.get(endpoint)
+        if per is None:
+            # both result labels exist from first touch, so the view
+            # always shows {"admitted": n, "rejected": m}
+            per = self._ep_c[endpoint] = {
+                r: self._track(
+                    self.metrics.counter(
+                        "serve_endpoint_requests_total",
+                        "per-endpoint admission results",
+                        endpoint=endpoint,
+                        result=r,
+                    )
+                )
+                for r in ("admitted", "rejected")
+            }
+        return per
 
     def count(self, endpoint: str, key: str) -> None:
-        per = self.by_endpoint.setdefault(endpoint, {"admitted": 0, "rejected": 0})
-        per[key] += 1
+        self._ep(endpoint)[key].inc()
 
     def record_outcome(self, outcome: ValidationOutcome) -> None:
-        self.outcomes[outcome.value] = self.outcomes.get(outcome.value, 0) + 1
+        self._outcome_c[outcome.value].inc()
+
+    def snapshot(self) -> Dict[str, Any]:
+        snap = super().snapshot()
+        snap["outcomes"] = self.outcomes
+        snap["by_endpoint"] = self.by_endpoint
+        snap["fallback_reasons"] = dict(self.fallback_reasons)
+        return snap
 
 
 class ServeEngine:
@@ -152,7 +220,10 @@ class ServeEngine:
         # registry also links all batchable endpoint tapes for
         # submit_batch's single-launch mixed admission.
         self.registry = registry if registry is not None else SchemaRegistry()
-        self.stats = ServeStats()
+        # one shared MetricRegistry across engine + registry + executor:
+        # a single render_prometheus() exports the whole serving surface
+        self.stats = ServeStats(self.registry.metrics)
+        self._lat: Dict[str, Histogram] = {}
         if request_schema is not None or "default" not in self.registry:
             self.register_endpoint("default", request_schema or REQUEST_SCHEMA)
         for name, schema in (endpoint_schemas or {}).items():
@@ -196,8 +267,8 @@ class ServeEngine:
 
     def endpoint_stats(self) -> Dict[str, Dict[str, Any]]:
         """Per-endpoint serving view: admission counters merged with the
-        registry's compile-time facts (batchable, fallback reason,
-        unroll budget/frontiers)."""
+        registry's compile-time facts (batchable, fallback reason, tape
+        shape, unroll budget/frontiers)."""
         out: Dict[str, Dict[str, Any]] = {}
         swap_failures = self.registry.swap_failures()
         for endpoint in self.registry.endpoints():
@@ -208,6 +279,13 @@ class ServeEngine:
             per["version"] = entry.version
             per["batchable"] = entry.stats.batchable
             per["fallback_reason"] = entry.stats.fallback_reason
+            # compiled tape shape (SchemaStats): the batched-cost model's
+            # inputs -- window bound A-hat, hash-run bound K, location
+            # horizon, circuit count, unroll budget, frontier count
+            per["a_hat"] = entry.stats.a_hat
+            per["k"] = entry.stats.k
+            per["horizon"] = entry.stats.horizon
+            per["n_circuits"] = entry.stats.n_circuits
             per["unroll_depth"] = entry.stats.unroll_depth
             per["n_frontier"] = entry.stats.n_frontier
             per["last_swap_error"] = swap_failures.get(endpoint, "")
@@ -217,12 +295,39 @@ class ServeEngine:
             out[endpoint] = per
         return out
 
+    def _latency(self, endpoint: str) -> Histogram:
+        """Per-endpoint request-latency histogram (one observation per
+        received request; unknown endpoints share ``__unknown__``)."""
+        h = self._lat.get(endpoint)
+        if h is None:
+            h = self._lat[endpoint] = self.registry.metrics.histogram(
+                "serve_request_seconds",
+                "request wall time through submit/submit_batch",
+                buckets=DEFAULT_LATENCY_BUCKETS,
+                endpoint=endpoint,
+            )
+        return h
+
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """JSON-ready snapshot of the shared metric registry."""
+        return self.registry.metrics.snapshot()
+
+    def render_metrics(self) -> str:
+        """Prometheus exposition of the shared metric registry."""
+        return self.registry.metrics.render_prometheus()
+
     @property
     def validator(self):
         """The default endpoint's serving validator (hot-swap aware)."""
         return self.registry.get("default").validator
 
-    def submit(self, request_json: str, endpoint: str = "default") -> SubmitResult:
+    def submit(
+        self,
+        request_json: str,
+        endpoint: str = "default",
+        *,
+        explain: bool = False,
+    ) -> SubmitResult:
         """Validate + enqueue one request.
 
         Returns a :class:`SubmitResult` -- unpackable as the historical
@@ -230,16 +335,32 @@ class ServeEngine:
         ``ValidationOutcome`` on ``.outcome``.  Validation runs through
         the registry's containment ladder: resource guard, then the
         breaker-gated deadline-bounded sequential oracle.
+
+        ``explain=True`` opts into first-failure attribution: INVALID
+        rejects carry the attributed site in the error string instead of
+        the generic message.  The default path is unchanged.
         """
+        t_start = time.perf_counter()
+        try:
+            with _span("serve.submit", endpoint=endpoint):
+                return self._submit_one(request_json, endpoint, explain)
+        finally:
+            label = endpoint if endpoint in self.registry else "__unknown__"
+            self._latency(label).observe(time.perf_counter() - t_start)
+
+    def _submit_one(
+        self, request_json: str, endpoint: str, explain: bool
+    ) -> SubmitResult:
         self.stats.received += 1
         serial = self.stats.received
         request, err = self._parse(request_json, endpoint)
         if err:
             return SubmitResult(None, err, ValidationOutcome.REJECTED_GUARD)
         t0 = time.perf_counter()
-        verdict = self.registry.validate_one(
-            endpoint, request, key=("submit", serial)
-        )
+        with _span("serve.validate", endpoint=endpoint):
+            verdict = self.registry.validate_one(
+                endpoint, request, key=("submit", serial), explain=explain
+            )
         self.stats.validation_seconds += time.perf_counter() - t0
         self.stats.record_outcome(verdict.outcome)
         if verdict.outcome in (
@@ -254,12 +375,19 @@ class ServeEngine:
         self.stats.rejected += 1
         self.stats.count(endpoint, "rejected")
         if verdict.outcome is ValidationOutcome.INVALID:
-            err = "schema validation failed"
+            err = verdict.reason if verdict.site is not None else (
+                "schema validation failed"
+            )
         else:
             err = f"{verdict.outcome.value}: {verdict.reason}"
         return SubmitResult(None, err, verdict.outcome)
 
-    def submit_batch(self, requests: Sequence[Tuple[str, str]]) -> List[SubmitResult]:
+    def submit_batch(
+        self,
+        requests: Sequence[Tuple[str, str]],
+        *,
+        explain: bool = False,
+    ) -> List[SubmitResult]:
         """Admit a mixed-endpoint burst of (endpoint, request_json) pairs.
 
         All parseable requests are validated in ONE batched launch over
@@ -269,49 +397,81 @@ class ServeEngine:
         ERROR_ISOLATED result while every other row's verdict is
         bit-identical to a fault-free batch.  Returns a
         :class:`SubmitResult` per input, in order.
+
+        ``explain=True`` opts into batched first-failure attribution
+        (one extra explain launch over the already-encoded table);
+        INVALID results carry the attributed site in their error string.
+        Latency accounting: exactly one ``serve_request_seconds``
+        observation per received request -- the burst's validation wall
+        time amortized evenly over its validated rows, and 0.0 for rows
+        rejected before validation (parse/guard).
         """
-        out: List[Optional[SubmitResult]] = [None] * len(requests)
-        parsed: List[Tuple[int, str, Any, int]] = []
-        for i, (endpoint, request_json) in enumerate(requests):
-            self.stats.received += 1
-            serial = self.stats.received
-            request, err = self._parse(request_json, endpoint)
-            if err:
-                out[i] = SubmitResult(None, err, ValidationOutcome.REJECTED_GUARD)
-            else:
-                parsed.append((i, endpoint, request, serial))
-        if parsed:
-            docs = [r for _, _, r, _ in parsed]
-            endpoints = [e for _, e, _, _ in parsed]
-            keys = [("batch", s) for _, _, _, s in parsed]
-            t0 = time.perf_counter()
-            verdicts, counts = self.registry.admit_mixed_ex(
-                docs,
-                endpoints,
-                max_nodes=self.scfg.admission_max_nodes,
-                keys=keys,
-            )
-            self.stats.batch_validated += counts.batch_validated
-            self.stats.fallback_validated += counts.fallback_validated
-            self.stats.undecided += counts.undecided
-            self.stats.oversize += counts.oversize
-            self.stats.unroll_overflow += counts.unroll_overflow
-            self.stats.validation_seconds += time.perf_counter() - t0
-            for (i, endpoint, request, _), verdict in zip(parsed, verdicts):
-                self.stats.record_outcome(verdict.outcome)
-                if verdict.admitted:
+        with _span("serve.submit_batch", batch=len(requests)):
+            out: List[Optional[SubmitResult]] = [None] * len(requests)
+            parsed: List[Tuple[int, str, Any, int]] = []
+            guard_rejected: List[str] = []
+            for i, (endpoint, request_json) in enumerate(requests):
+                self.stats.received += 1
+                serial = self.stats.received
+                request, err = self._parse(request_json, endpoint)
+                if err:
                     out[i] = SubmitResult(
-                        self._enqueue(request, endpoint), "", verdict.outcome
+                        None, err, ValidationOutcome.REJECTED_GUARD
+                    )
+                    guard_rejected.append(
+                        endpoint if endpoint in self.registry else "__unknown__"
                     )
                 else:
-                    self.stats.rejected += 1
-                    self.stats.count(endpoint, "rejected")
-                    if verdict.outcome is ValidationOutcome.INVALID:
-                        err = "schema validation failed"
+                    parsed.append((i, endpoint, request, serial))
+            if parsed:
+                docs = [r for _, _, r, _ in parsed]
+                endpoints = [e for _, e, _, _ in parsed]
+                keys = [("batch", s) for _, _, _, s in parsed]
+                t0 = time.perf_counter()
+                with _span("serve.validate", batch=len(parsed)):
+                    verdicts, counts = self.registry.admit_mixed_ex(
+                        docs,
+                        endpoints,
+                        max_nodes=self.scfg.admission_max_nodes,
+                        keys=keys,
+                        explain=explain,
+                    )
+                dt = time.perf_counter() - t0
+                self.stats.batch_validated += counts.batch_validated
+                self.stats.fallback_validated += counts.fallback_validated
+                self.stats.undecided += counts.undecided
+                self.stats.oversize += counts.oversize
+                self.stats.unroll_overflow += counts.unroll_overflow
+                self.stats.validation_seconds += dt
+                # amortized latency: dt/n per validated row, grouped per
+                # endpoint so each histogram takes one observe_many call
+                per_row = dt / len(parsed)
+                ep_rows: Dict[str, int] = {}
+                for _, endpoint, _, _ in parsed:
+                    ep_rows[endpoint] = ep_rows.get(endpoint, 0) + 1
+                for endpoint, n in ep_rows.items():
+                    self._latency(endpoint).observe_many(per_row, n)
+                for (i, endpoint, request, _), verdict in zip(parsed, verdicts):
+                    self.stats.record_outcome(verdict.outcome)
+                    if verdict.admitted:
+                        out[i] = SubmitResult(
+                            self._enqueue(request, endpoint), "", verdict.outcome
+                        )
                     else:
-                        err = f"{verdict.outcome.value}: {verdict.reason}"
-                    out[i] = SubmitResult(None, err, verdict.outcome)
-        return out  # type: ignore[return-value]
+                        self.stats.rejected += 1
+                        self.stats.count(endpoint, "rejected")
+                        if verdict.outcome is ValidationOutcome.INVALID:
+                            err = (
+                                verdict.reason
+                                if verdict.site is not None
+                                else "schema validation failed"
+                            )
+                        else:
+                            err = f"{verdict.outcome.value}: {verdict.reason}"
+                        out[i] = SubmitResult(None, err, verdict.outcome)
+            for label in guard_rejected:
+                self._latency(label).observe(0.0)
+            return out  # type: ignore[return-value]
 
     def _parse(self, request_json: str, endpoint: str):
         """Pre-validation gate: endpoint membership, payload byte guard,
@@ -333,7 +493,8 @@ class ServeEngine:
             self.stats.record_outcome(ValidationOutcome.REJECTED_GUARD)
             return None, f"payload {len(request_json)} bytes > guard cap {limit}"
         try:
-            request = json.loads(request_json)
+            with _span("serve.parse", bytes=len(request_json)):
+                request = json.loads(request_json)
         except json.JSONDecodeError as exc:
             self.stats.rejected += 1
             self.stats.count(endpoint, "rejected")

@@ -1,0 +1,273 @@
+"""Batched first-failure attribution vs the sequential oracle (DESIGN.md §12).
+
+The differential contract: on a document violating exactly ONE schema
+keyword, ``BatchValidator.explain_batch`` must attribute the same schema
+location the sequential ``Validator.explain`` reports innermost -- both
+engines see a single failure, so there is no tie-break slack.  Multi-
+failure documents get the weaker membership check (the batched pick is
+one of the sequential trace's failing locations) plus the documented
+tie-break (lowest BFS node; assertion < required < closed within a node;
+lowest assertion row; structural beats circuit at the same node).
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import Validator, compile_schema
+from repro.core.batch_executor import BatchValidator
+from repro.core.explain import FailureSite, keyword_of, node_pointer
+from repro.core.outcomes import ValidationOutcome
+from repro.core.tape import try_build_tape
+from repro.data.doc_table import encode_batch
+from repro.registry import SchemaRegistry
+
+SCHEMA = {
+    "type": "object",
+    "required": ["id", "name"],
+    "additionalProperties": False,
+    "properties": {
+        "id": {"type": "integer", "minimum": 0, "maximum": 1_000_000},
+        "name": {"type": "string", "minLength": 2, "maxLength": 32},
+        "kind": {"enum": ["basic", "pro", "trial"]},
+        "score": {"type": "number", "minimum": 0, "maximum": 1},
+        "tags": {"type": "array", "items": {"type": "string"}, "maxItems": 4},
+    },
+}
+
+VALID = {"id": 7, "name": "ok", "kind": "pro", "score": 0.5, "tags": ["a"]}
+
+
+def _harness(schema):
+    compiled = compile_schema(schema)
+    tape, reason = try_build_tape(compiled)
+    assert tape is not None, reason
+    return Validator(compiled), BatchValidator(tape, max_depth=8, use_pallas=False)
+
+
+def _single_failure_corpus(seed=0):
+    """Invalid documents each violating exactly one keyword."""
+    rng = random.Random(seed)
+    corpus = []
+    mutations = [
+        lambda d: d.pop("id"),  # required
+        lambda d: d.pop("name"),  # required
+        lambda d: d.update(id="x"),  # type (id)
+        lambda d: d.update(id=-rng.randint(1, 9)),  # minimum
+        lambda d: d.update(id=2_000_000),  # maximum
+        lambda d: d.update(name="x"),  # minLength
+        lambda d: d.update(name="x" * 40),  # maxLength
+        lambda d: d.update(name=rng.randint(0, 9)),  # type (name)
+        lambda d: d.update(kind="enterprise"),  # enum
+        lambda d: d.update(score=1.5),  # maximum (score)
+        lambda d: d.update(score="high"),  # type (score)
+        lambda d: d.update(tags=["a", "b", "c", "d", "e"]),  # maxItems
+        lambda d: d.update(tags=["a", 3]),  # items type
+        lambda d: d.update(surprise=1),  # additionalProperties
+    ]
+    for k in range(40):
+        doc = dict(VALID)
+        mutations[k % len(mutations)](doc)
+        corpus.append(doc)
+    return corpus
+
+
+class TestDifferentialAttribution:
+    def test_single_failure_corpus_agrees_with_sequential(self):
+        seq, bv = _harness(SCHEMA)
+        docs = _single_failure_corpus()
+        table = encode_batch(docs, max_nodes=64, max_depth=8)
+        valid, decided = bv.validate(table)
+        assert decided.all() and not valid.any()
+        sites = bv.explain_batch(table, docs=docs)
+        for doc, site in zip(docs, sites):
+            ok, trace = seq.explain(doc)
+            assert not ok and site is not None, doc
+            seq_paths = {p for p, _ in trace}
+            # single violation: the innermost sequential path IS the
+            # batched attribution (no tie-break slack)
+            assert site.schema_path == trace[0][0], (doc, site, trace)
+            assert site.schema_path in seq_paths
+
+    def test_multi_failure_site_is_a_sequential_failure(self):
+        seq, bv = _harness(SCHEMA)
+        docs = [
+            {"id": "x", "name": 0, "kind": "zz"},
+            {"name": "q" * 50, "score": -3, "extra": 1},
+            {},
+        ]
+        table = encode_batch(docs, max_nodes=64, max_depth=8)
+        sites = bv.explain_batch(table, docs=docs)
+        for doc, site in zip(docs, sites):
+            ok, trace = seq.explain(doc)
+            assert not ok and site is not None
+            assert site.schema_path in {p for p, _ in trace}, (doc, site, trace)
+
+    def test_valid_documents_attribute_none(self):
+        _, bv = _harness(SCHEMA)
+        docs = [VALID, {"id": 1, "name": "yo"}]
+        table = encode_batch(docs, max_nodes=64, max_depth=8)
+        assert bv.explain_batch(table, docs=docs) == [None, None]
+
+    def test_circuit_attribution_names_the_applicator(self):
+        schema = {
+            "type": "object",
+            "properties": {
+                "n": {"anyOf": [{"type": "integer", "minimum": 10}, {"type": "string"}]},
+                "m": {"not": {"type": "null"}},
+            },
+        }
+        seq, bv = _harness(schema)
+        docs = [{"n": 3}, {"m": None}, {"n": "fine"}]
+        table = encode_batch(docs, max_nodes=64, max_depth=8)
+        sites = bv.explain_batch(table, docs=docs)
+        assert sites[0].schema_path == "/properties/n/anyOf"
+        assert sites[0].keyword == "anyOf"
+        assert sites[0].instance_path == "/n"
+        assert sites[1].schema_path == "/properties/m/not"
+        assert sites[2] is None
+        for doc, site in zip(docs[:2], sites[:2]):
+            ok, trace = seq.explain(doc)
+            assert not ok
+            assert site.schema_path in {p for p, _ in trace}
+
+    def test_instance_pointers(self):
+        _, bv = _harness(SCHEMA)
+        docs = [
+            {"id": 1, "name": "ok", "tags": ["a", 3]},
+            {"id": "x", "name": "ok"},
+        ]
+        table = encode_batch(docs, max_nodes=64, max_depth=8)
+        sites = bv.explain_batch(table, docs=docs)
+        assert sites[0].instance_path == "/tags/1"
+        assert sites[1].instance_path == "/id"
+        # without docs: attribution still lands, pointers stay empty
+        sites = bv.explain_batch(table)
+        assert sites[0].schema_path and sites[0].instance_path == ""
+
+
+class TestTieBreak:
+    def test_lowest_bfs_node_wins(self):
+        # id (BFS node 1) and tags items (deeper) both fail -> id wins
+        seq, bv = _harness(SCHEMA)
+        docs = [{"id": "x", "name": "ok", "tags": [3]}]
+        table = encode_batch(docs, max_nodes=64, max_depth=8)
+        (site,) = bv.explain_batch(table, docs=docs)
+        assert site.instance_path == "/id"
+
+    def test_assertion_beats_required_at_the_same_node(self):
+        # root object: type passes; required fails at the root while a
+        # property assertion fails deeper -> the root required pick wins
+        # (lowest node), but a root-level assertion must outrank it
+        schema = {
+            "type": "object",
+            "required": ["a"],
+            "properties": {"a": {"type": "integer"}},
+            "minProperties": 2,
+        }
+        compiled = compile_schema(schema)
+        tape, reason = try_build_tape(compiled)
+        if tape is None:
+            pytest.skip(f"outside structural subset: {reason}")
+        bv = BatchValidator(tape, max_depth=8, use_pallas=False)
+        docs = [{}]  # fails minProperties (assertion) AND required
+        table = encode_batch(docs, max_nodes=64, max_depth=8)
+        (site,) = bv.explain_batch(table, docs=docs)
+        # both anchor at node 0: kind 0 (assertion) < kind 1 (required)
+        assert site.keyword != "required", site
+
+    def test_structural_beats_circuit_at_same_node(self):
+        schema = {
+            "type": "object",
+            "properties": {
+                "v": {
+                    "type": "integer",
+                    "minimum": 5,
+                    "anyOf": [{"minimum": 100}, {"maximum": -100}],
+                }
+            },
+        }
+        compiled = compile_schema(schema)
+        tape, reason = try_build_tape(compiled)
+        if tape is None:
+            pytest.skip(f"outside structural subset: {reason}")
+        bv = BatchValidator(tape, max_depth=8, use_pallas=False)
+        docs = [{"v": 2}]  # fails plain minimum AND the anyOf circuit
+        table = encode_batch(docs, max_nodes=64, max_depth=8)
+        (site,) = bv.explain_batch(table, docs=docs)
+        assert site.keyword == "minimum", site  # structural wins the tie
+
+
+class TestNodePointer:
+    def test_bfs_order_replay(self):
+        doc = {"a": [10, {"b": 1}], "c": "x"}
+        # BFS: 0={root} 1=[10,{b:1}] 2="x" 3=10 4={b:1} 5=1
+        assert node_pointer(doc, 0) == ""
+        assert node_pointer(doc, 1) == "/a"
+        assert node_pointer(doc, 2) == "/c"
+        assert node_pointer(doc, 3) == "/a/0"
+        assert node_pointer(doc, 4) == "/a/1"
+        assert node_pointer(doc, 5) == "/a/1/b"
+        assert node_pointer(doc, 99) == ""
+
+    def test_rfc6901_escaping(self):
+        doc = {"a/b": 1, "c~d": 2}
+        assert node_pointer(doc, 1) == "/a~1b"
+        assert node_pointer(doc, 2) == "/c~0d"
+
+    def test_keyword_of(self):
+        assert keyword_of("/properties/a/minLength") == "minLength"
+        assert keyword_of("/type") == "type"
+        assert keyword_of("") == ""
+
+    def test_render(self):
+        s = FailureSite("/properties/a/type", "type", "/a")
+        assert "'/a'" in s.render() and "type" in s.render()
+
+
+class TestRegistryExplainPlumbing:
+    def test_admit_mixed_ex_explain_carries_sites(self):
+        reg = SchemaRegistry(use_pallas=False)
+        reg.register("users", SCHEMA)
+        docs = [VALID, {"id": -5, "name": "ok"}, {"id": 1}]
+        verdicts, _ = reg.admit_mixed_ex(docs, ["users"] * 3, explain=True)
+        assert verdicts[0].site is None
+        assert verdicts[1].outcome is ValidationOutcome.INVALID
+        assert isinstance(verdicts[1].site, FailureSite)
+        # min+max fuse into AssertionNumberBounds carrying the bare
+        # parent path -- same provenance the sequential trace reports
+        assert verdicts[1].site.schema_path == "/properties/id"
+        assert verdicts[1].site.render() == verdicts[1].reason
+        assert verdicts[2].site is not None  # missing "name"
+        assert verdicts[2].site.keyword == "required"
+
+    def test_explain_false_keeps_generic_reason(self):
+        reg = SchemaRegistry(use_pallas=False)
+        reg.register("users", SCHEMA)
+        verdicts, _ = reg.admit_mixed_ex(
+            [{"id": -5, "name": "ok"}], ["users"], explain=False
+        )
+        assert verdicts[0].reason == "schema validation failed"
+        assert verdicts[0].site is None
+
+    def test_sequential_fallback_explain(self):
+        reg = SchemaRegistry(use_pallas=False)
+        # outside the structural subset -> sequential-only endpoint
+        reg.register("pat", {"type": "string", "pattern": "^a+$"})
+        v = reg.validate_one("pat", "bbb", explain=True)
+        assert v.outcome is ValidationOutcome.INVALID
+        assert v.site is not None and v.site.keyword == "pattern"
+        # explain=False: generic reason, no site
+        v = reg.validate_one("pat", "bbb")
+        assert v.site is None and v.reason == "schema validation failed"
+
+    def test_batched_and_sequential_sites_agree(self):
+        reg = SchemaRegistry(use_pallas=False)
+        reg.register("users", SCHEMA)
+        docs = _single_failure_corpus(seed=3)
+        verdicts, _ = reg.admit_mixed_ex(docs, ["users"] * len(docs), explain=True)
+        for doc, verdict in zip(docs, verdicts):
+            assert verdict.outcome is ValidationOutcome.INVALID
+            seq = reg.validate_one("users", doc, explain=True)
+            assert verdict.site.schema_path == seq.site.schema_path, doc
