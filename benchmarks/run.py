@@ -10,6 +10,7 @@ One module per paper table/figure:
   logical      -- beyond-paper logical-applicator circuits (tagged unions)
   robustness   -- fault-containment overhead + poisoned-batch throughput
   observability -- trace/metric seam overhead + explain attribution cost
+  serve_load   -- open-loop Poisson arrival-rate sweep (latency percentiles)
   roofline     -- §Roofline terms from the dry-run artifacts
 
 Prints ``name,us_per_call,derived`` CSV lines and writes the full report
@@ -40,6 +41,7 @@ def main() -> None:
         registry,
         robustness,
         roofline,
+        serve_load,
         validation,
     )
 
@@ -53,6 +55,7 @@ def main() -> None:
         ("logical", logical),
         ("robustness", robustness),
         ("observability", observability),
+        ("serve_load", serve_load),
         ("roofline", roofline),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None

@@ -23,8 +23,15 @@ are reported but never gated:
   (BENCH_robustness) depends on fault placement
 
 Benchmarks new in this PR (present in the tree, absent at ``--ref``)
-are skipped with a note -- their first committed snapshot becomes the
-baseline for the next PR.
+**pass** with a ``new benchmark`` note -- their first committed snapshot
+becomes the baseline for the next PR.  A baseline that exists but does
+not parse (e.g. a historical merge artifact) is treated the same way,
+never as a crash.
+
+Besides the console report, the gate writes
+``results/gate_summary.json`` -- machine-readable comparisons +
+failures -- which ``scripts/perf_report.py`` folds into the
+consolidated perf trajectory report.
 """
 
 from __future__ import annotations
@@ -34,7 +41,7 @@ import json
 import subprocess
 import sys
 from pathlib import Path
-from typing import Any, Iterator, List, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 REPO = Path(__file__).resolve().parents[1]
 RESULTS = REPO / "results"
@@ -43,17 +50,20 @@ GATED_SUFFIX = "us_per_doc"
 ALLOWLIST = {"traced_us_per_doc", "total_us_per_doc"}
 
 
-def _committed(ref: str, relpath: str) -> Any:
+def _committed(ref: str, relpath: str, repo: Path = REPO) -> Any:
     try:
         blob = subprocess.run(
             ["git", "show", f"{ref}:{relpath}"],
-            cwd=REPO,
+            cwd=repo,
             capture_output=True,
             check=True,
         ).stdout
-    except subprocess.CalledProcessError:
+    except (subprocess.CalledProcessError, OSError):
         return None  # not committed at ref (new benchmark)
-    return json.loads(blob)
+    try:
+        return json.loads(blob)
+    except json.JSONDecodeError:
+        return None  # unparseable baseline: same disposition as absent
 
 
 def _leaves(obj: Any, path: str = "") -> Iterator[Tuple[str, str, float]]:
@@ -68,16 +78,44 @@ def _leaves(obj: Any, path: str = "") -> Iterator[Tuple[str, str, float]]:
         yield path, path.rsplit(".", 1)[-1].rsplit("[", 1)[0], float(obj)
 
 
-def gate(ref: str, threshold: float) -> int:
+def gate(
+    ref: str,
+    threshold: float,
+    *,
+    results_dir: Path = RESULTS,
+    repo: Path = REPO,
+    summary_path: Optional[Path] = None,
+) -> int:
+    """Run the gate; returns the process exit code (0 pass, 1 fail).
+
+    ``results_dir``/``repo`` are parameters so tests can gate a synthetic
+    results tree against a scratch git repo.  ``summary_path`` (default:
+    ``<results_dir>/gate_summary.json``) receives the machine-readable
+    summary consumed by ``scripts/perf_report.py``.
+    """
     failures: List[str] = []
-    gated = skipped = 0
-    for fresh_path in sorted(RESULTS.glob("BENCH_*.json")):
-        rel = fresh_path.relative_to(REPO).as_posix()
-        fresh = json.loads(fresh_path.read_text())
-        base = _committed(ref, rel)
+    comparisons: List[Dict[str, Any]] = []
+    new_benchmarks: List[str] = []
+    unreadable: List[str] = []
+    gated = 0
+    for fresh_path in sorted(results_dir.glob("BENCH_*.json")):
+        try:
+            rel = fresh_path.relative_to(repo).as_posix()
+        except ValueError:
+            rel = fresh_path.name  # results tree outside the repo (tests)
+        try:
+            fresh = json.loads(fresh_path.read_text())
+        except json.JSONDecodeError as exc:
+            # a fresh BENCH file that does not parse means the benchmark
+            # wrote garbage THIS run -- that is a failure, not a skip
+            failures.append(f"{rel}: unreadable fresh results ({exc})")
+            unreadable.append(rel)
+            print(f"FAIL  {rel}: unreadable fresh results: {exc}")
+            continue
+        base = _committed(ref, rel, repo)
         if base is None:
-            print(f"SKIP  {rel}: no snapshot at {ref} (new benchmark)")
-            skipped += 1
+            print(f"PASS  {rel}: no snapshot at {ref} (new benchmark)")
+            new_benchmarks.append(rel)
             continue
         base_leaves = {p: v for p, _, v in _leaves(base)}
         for dotted, key, new in _leaves(fresh):
@@ -100,20 +138,45 @@ def gate(ref: str, threshold: float) -> int:
                         f"(+{delta * 100:.1f}% > {threshold * 100:.0f}%)"
                     )
             gated += key not in ALLOWLIST
+            comparisons.append(
+                {
+                    "file": rel,
+                    "path": dotted,
+                    "baseline": old,
+                    "fresh": new,
+                    "delta_pct": delta * 100,
+                    "allowlisted": key in ALLOWLIST,
+                    "verdict": verdict,
+                }
+            )
             print(
                 f"{tag} {rel}:{dotted}: {old:.3f} -> {new:.3f} "
                 f"({delta * +100:+.1f}%) {verdict}"
             )
     print(
-        f"\nbench_gate: {gated} gated comparisons, {skipped} new benchmarks, "
-        f"{len(failures)} failures"
+        f"\nbench_gate: {gated} gated comparisons, "
+        f"{len(new_benchmarks)} new benchmarks, {len(failures)} failures"
     )
     if failures:
         print("\nREGRESSIONS over threshold:")
         for f in failures:
             print(f"  {f}")
-        return 1
-    return 0
+    summary = {
+        "ref": ref,
+        "threshold": threshold,
+        "status": "fail" if failures else "pass",
+        "gated_comparisons": gated,
+        "comparisons": comparisons,
+        "new_benchmarks": new_benchmarks,
+        "unreadable": unreadable,
+        "failures": failures,
+    }
+    out = summary_path if summary_path is not None else results_dir / "gate_summary.json"
+    try:
+        out.write_text(json.dumps(summary, indent=2) + "\n")
+    except OSError as exc:  # the summary is an artifact, not the verdict
+        print(f"bench_gate: could not write {out}: {exc}")
+    return 1 if failures else 0
 
 
 def main() -> int:

@@ -1,0 +1,276 @@
+#!/usr/bin/env python3
+"""Consolidated perf trajectory report (DESIGN.md §13).
+
+Folds every machine-readable artifact the harness emits --
+``results/BENCH_*.json``, ``results/gate_summary.json`` (written by
+``scripts/bench_gate.py``), and ``results/conformance_summary.json`` --
+into one report in two renderings:
+
+- ``results/perf_report.json`` -- the consolidated tree CI archives and
+  downstream tooling queries
+- ``results/perf_report.md``   -- the same numbers as a human-readable
+  trajectory table (headline us/doc latencies, serve-load percentile
+  sweep, phase attribution, SLO posture, gate verdict)
+
+Usage::
+
+    python scripts/perf_report.py [--results results/]
+
+The report is assembled from whatever artifacts exist: a missing file
+is reported as absent, never a crash, so the script is safe to run on a
+partial results tree (e.g. CI jobs that only refreshed one benchmark).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+REPO = Path(__file__).resolve().parents[1]
+RESULTS = REPO / "results"
+
+HEADLINE_SUFFIX = "us_per_doc"
+
+
+def _load(path: Path) -> Optional[Any]:
+    try:
+        return json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def _leaves(obj: Any, path: str = "") -> Iterator[Tuple[str, str, float]]:
+    """Yield (dotted_path, leaf_key, value) for every numeric leaf."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            yield from _leaves(v, f"{path}.{k}" if path else str(k))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            yield from _leaves(v, f"{path}[{i}]")
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        yield path, path.rsplit(".", 1)[-1].rsplit("[", 1)[0], float(obj)
+
+
+def _headlines(bench: Dict[str, Any]) -> Dict[str, float]:
+    """The latency-style leaves bench_gate gates: the perf trajectory."""
+    return {
+        dotted: value
+        for dotted, key, value in _leaves(bench)
+        if key.endswith(HEADLINE_SUFFIX)
+    }
+
+
+def _conformance_totals(summary: Any) -> Optional[Dict[str, Dict[str, int]]]:
+    if not isinstance(summary, dict) or "files" not in summary:
+        return None
+    totals: Dict[str, Dict[str, int]] = {}
+    for per_engine in summary["files"].values():
+        for engine, counts in per_engine.items():
+            agg = totals.setdefault(
+                engine, {"passed": 0, "failed": 0, "skipped": 0}
+            )
+            for k in agg:
+                agg[k] += int(counts.get(k, 0))
+    return totals
+
+
+def collect(results_dir: Path = RESULTS) -> Dict[str, Any]:
+    """Assemble the consolidated report tree from a results directory."""
+    benchmarks: Dict[str, Any] = {}
+    for path in sorted(results_dir.glob("BENCH_*.json")):
+        name = path.stem[len("BENCH_") :]
+        bench = _load(path)
+        if bench is None:
+            benchmarks[name] = {"error": "unreadable"}
+            continue
+        entry: Dict[str, Any] = {"headline": _headlines(bench)}
+        if name == "serve_load":
+            entry["rates"] = [
+                {
+                    k: row[k]
+                    for k in (
+                        "offered_rate_per_s",
+                        "p50_ms",
+                        "p99_ms",
+                        "p999_ms",
+                        "mean_batch",
+                        "utilization",
+                        "max_queue_depth",
+                    )
+                    if k in row
+                }
+                for row in bench.get("rates", [])
+            ]
+            entry["endpoint_slo"] = bench.get("endpoint_slo", {})
+        if name == "observability" and "profile" in bench:
+            prof = bench["profile"]
+            entry["attribution"] = {
+                "coverage": prof.get("coverage"),
+                "profiler_armed_overhead_pct": prof.get(
+                    "profiler_armed_overhead_pct"
+                ),
+                "disarmed_seam_overhead_pct": prof.get(
+                    "disarmed_seam_overhead_pct"
+                ),
+                "top_phases": dict(
+                    sorted(
+                        prof.get("phases", {}).items(),
+                        key=lambda kv: kv[1].get("self_ns", 0.0),
+                        reverse=True,
+                    )[:8]
+                ),
+            }
+        benchmarks[name] = entry
+
+    gate = _load(results_dir / "gate_summary.json")
+    conformance = _conformance_totals(
+        _load(results_dir / "conformance_summary.json")
+    )
+    return {
+        "benchmarks": benchmarks,
+        "gate": gate,
+        "conformance": conformance,
+    }
+
+
+def render_markdown(report: Dict[str, Any]) -> str:
+    out: List[str] = ["# Perf trajectory report", ""]
+
+    gate = report.get("gate")
+    if gate:
+        out.append(
+            f"**Gate**: {gate['status']} "
+            f"({gate['gated_comparisons']} gated comparisons, "
+            f"{len(gate.get('new_benchmarks', []))} new benchmarks, "
+            f"{len(gate.get('failures', []))} failures vs "
+            f"`{gate.get('ref', '?')}` at {gate.get('threshold', 0) * 100:.0f}%)"
+        )
+    else:
+        out.append("**Gate**: not run (no gate_summary.json)")
+    out.append("")
+
+    out.append("## Headline latencies (us/doc)")
+    out.append("")
+    out.append("| benchmark | metric | us/doc |")
+    out.append("|---|---|---:|")
+    for name, entry in report["benchmarks"].items():
+        for dotted, value in sorted(entry.get("headline", {}).items()):
+            out.append(f"| {name} | {dotted} | {value:.3f} |")
+    out.append("")
+
+    serve = report["benchmarks"].get("serve_load", {})
+    if serve.get("rates"):
+        out.append("## Open-loop serve load (Poisson arrivals)")
+        out.append("")
+        out.append(
+            "| offered/s | p50 ms | p99 ms | p99.9 ms | mean batch "
+            "| util | max queue |"
+        )
+        out.append("|---:|---:|---:|---:|---:|---:|---:|")
+        for row in serve["rates"]:
+            out.append(
+                f"| {row['offered_rate_per_s']:.0f} "
+                f"| {row['p50_ms']:.2f} | {row['p99_ms']:.2f} "
+                f"| {row['p999_ms']:.2f} | {row['mean_batch']:.1f} "
+                f"| {row['utilization']:.2f} | {row['max_queue_depth']} |"
+            )
+        out.append("")
+    if serve.get("endpoint_slo"):
+        out.append("## Per-endpoint SLO")
+        out.append("")
+        out.append("| endpoint | objective s | target | good ratio | burn |")
+        out.append("|---|---:|---:|---:|---:|")
+        for ep, s in sorted(serve["endpoint_slo"].items()):
+            out.append(
+                f"| {ep} | {s.get('objective_s', 0):.3f} "
+                f"| {s.get('target', 0):.3f} "
+                f"| {s.get('good_ratio', 0):.4f} "
+                f"| {s.get('burn_rate', 0):.2f} |"
+            )
+        out.append("")
+
+    obs = report["benchmarks"].get("observability", {})
+    attr = obs.get("attribution")
+    if attr:
+        out.append("## Cost attribution (armed profiler, one admit)")
+        out.append("")
+        cov = attr.get("coverage")
+        out.append(
+            f"Coverage: **{cov * 100:.1f}%**" if cov is not None else
+            "Coverage: n/a"
+        )
+        armed = attr.get("profiler_armed_overhead_pct")
+        if armed is not None:
+            out.append(f", armed overhead {armed:+.2f}%")
+        seam = attr.get("disarmed_seam_overhead_pct")
+        if seam is not None:
+            out.append(f", disarmed seam vs baseline {seam:+.2f}%")
+        out.append("")
+        out.append("| phase | calls | self ms | share |")
+        out.append("|---|---:|---:|---:|")
+        total = sum(
+            p.get("self_ns", 0.0) for p in attr.get("top_phases", {}).values()
+        )
+        for phase, p in sorted(
+            attr.get("top_phases", {}).items(),
+            key=lambda kv: kv[1].get("self_ns", 0.0),
+            reverse=True,
+        ):
+            self_ns = p.get("self_ns", 0.0)
+            share = self_ns / total if total else 0.0
+            out.append(
+                f"| {phase} | {p.get('calls', 0)} "
+                f"| {self_ns / 1e6:.2f} | {share * 100:.1f}% |"
+            )
+        out.append("")
+
+    conf = report.get("conformance")
+    if conf:
+        out.append("## Conformance totals")
+        out.append("")
+        out.append("| engine | passed | failed | skipped |")
+        out.append("|---|---:|---:|---:|")
+        for engine, counts in sorted(conf.items()):
+            out.append(
+                f"| {engine} | {counts['passed']} | {counts['failed']} "
+                f"| {counts['skipped']} |"
+            )
+        out.append("")
+
+    return "\n".join(out) + "\n"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--results",
+        type=Path,
+        default=RESULTS,
+        help="results directory to consolidate",
+    )
+    args = ap.parse_args()
+    if not args.results.is_dir():
+        print(f"perf_report: no such results directory: {args.results}")
+        return 1
+    report = collect(args.results)
+    (args.results / "perf_report.json").write_text(
+        json.dumps(report, indent=2) + "\n"
+    )
+    md = render_markdown(report)
+    (args.results / "perf_report.md").write_text(md)
+    n_bench = len(report["benchmarks"])
+    gate = report.get("gate")
+    print(
+        f"perf_report: consolidated {n_bench} benchmarks, "
+        f"gate={'absent' if gate is None else gate['status']} -> "
+        f"{args.results / 'perf_report.json'}, "
+        f"{args.results / 'perf_report.md'}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -68,6 +68,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops as kops
+from ..obs.profile import phase as _phase
 from ..obs.trace import span as _span, trace_point as _trace_point
 from .explain import KIND_CIRCUIT, FailureSite, resolve_site
 from .nodetypes import T_ARR as _T_ARR, T_OBJ as _T_OBJ
@@ -340,22 +341,29 @@ class BatchValidator:
         B = table.batch
         ids = self._normalize_ids(B, schema_ids)
         cols = {k: jnp.asarray(v) for k, v in table.columns().items()}
+        # shape churn = jit re-traces: each new (B, N) pair re-traces the
+        # launch function (the power-of-two padding upstream exists to
+        # keep this set tiny).  Tracked unconditionally: the profiler's
+        # compile-vs-execute split keys on the same first-call-under-new-
+        # shape event whether or not metrics are attached.
+        shape = (B, table.max_nodes)
+        new_shape = shape not in self._seen_shapes
+        if new_shape:
+            self._seen_shapes.add(shape)
         m = self.metrics
         if m is not None:
-            # shape churn = jit re-traces: each new (B, N) pair re-traces
-            # the launch function (the power-of-two padding upstream
-            # exists to keep this set tiny)
-            shape = (B, table.max_nodes)
-            if shape not in self._seen_shapes:
-                self._seen_shapes.add(shape)
+            if new_shape:
                 self._m_recompiles.inc()
                 _trace_point("executor.recompile", shape=shape)
             t0 = time.perf_counter()
-        with _span("executor.launch"):
-            valid, in_depth, frontier = self._fn(cols, jnp.asarray(ids))
-            valid = np.asarray(valid)  # forces device sync inside the span
-            in_depth = np.asarray(in_depth)
-            frontier = np.asarray(frontier)
+        # first call under a new shape pays the jit trace: attribute its
+        # whole wall time to compile, steady-state launches to execute
+        with _phase("executor.compile" if new_shape else "executor.execute"):
+            with _span("executor.launch"):
+                valid, in_depth, frontier = self._fn(cols, jnp.asarray(ids))
+                valid = np.asarray(valid)  # forces device sync inside the span
+                in_depth = np.asarray(in_depth)
+                frontier = np.asarray(frontier)
         if m is not None:
             self._m_launches.inc()
             self._m_launch_seconds.inc(time.perf_counter() - t0)
@@ -489,7 +497,7 @@ class BatchValidator:
                 )
             )
         cols = {k: jnp.asarray(v) for k, v in table.columns().items()}
-        with _span("executor.explain", batch=B):
+        with _phase("executor.explain"), _span("executor.explain", batch=B):
             out = self._explain_fn(cols, jnp.asarray(ids))
         doc_key, bad_row, bad_loc, parent_loc, missing, root_fail, root_anchor = (
             np.asarray(x) for x in out

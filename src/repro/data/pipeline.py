@@ -22,6 +22,7 @@ import numpy as np
 
 from ..core import Validator
 from ..core.outcomes import Verdict
+from ..obs.profile import phase as _phase
 from ..obs.stats import RegistryBackedStats
 from ..registry import SchemaRegistry
 from . import tokenizer
@@ -177,13 +178,17 @@ class AdmissionController:
         if endpoints is None:
             endpoints = [self.endpoint] * len(records)
         self.stats.seen += len(records)
-        verdicts, counts = self.registry.admit_mixed_ex(
-            records,
-            endpoints,
-            max_nodes=self.batch_max_nodes,
-            keys=keys,
-            explain=explain,
-        )
+        # top-level attribution root: admit.* / encode.* / executor.* /
+        # fallback.* phases nest under it, so its exclusive time is the
+        # controller's own bookkeeping
+        with _phase("pipeline.admit"):
+            verdicts, counts = self.registry.admit_mixed_ex(
+                records,
+                endpoints,
+                max_nodes=self.batch_max_nodes,
+                keys=keys,
+                explain=explain,
+            )
         self.stats.batch_validated += counts.batch_validated
         self.stats.undecided += counts.undecided
         self.stats.oversize += counts.oversize

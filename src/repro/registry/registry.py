@@ -54,6 +54,7 @@ from ..core.outcomes import (
 from ..core.explain import FailureSite, keyword_of
 from ..core.tape import DEFAULT_UNROLL_DEPTH, LocationTape, try_build_tape
 from ..obs.metrics import MetricRegistry
+from ..obs.profile import phase as _phase
 from ..obs.trace import span as _span
 from .linker import LinkedTape, TapeSegment, link_tapes, segment_tape
 
@@ -584,7 +585,7 @@ class SchemaRegistry:
             raise ValueError(f"{len(row_keys)} keys for {len(docs)} docs")
         verdicts: List[Optional[Verdict]] = [None] * len(docs)
         counts = AdmitCounts()
-        with _span("registry.guard", batch=len(docs)):
+        with _phase("admit.guard"), _span("registry.guard", batch=len(docs)):
             for i, doc in enumerate(docs):
                 why = resource_guard(doc, self.guard)
                 if why:
@@ -608,7 +609,7 @@ class SchemaRegistry:
             fast_keys = [row_keys[i] for i in fast] + [
                 ("__pad__", j) for j in range(pad)
             ]
-            with _span("registry.encode", batch=bucket):
+            with _phase("admit.encode"), _span("registry.encode", batch=bucket):
                 table = encode_batch(
                     [docs[i] for i in fast] + [None] * pad,
                     max_nodes=max_nodes,
@@ -617,9 +618,12 @@ class SchemaRegistry:
                 )
             pad_ids = np.concatenate([ids[fast], np.zeros(pad, np.int32)])
             bv = self.batch_validator()
-            valid, decided, frontier, errors = bv.validate_isolated(
-                table, pad_ids.astype(np.int32), keys=fast_keys
-            )
+            # admit.launch's exclusive time is the bisect/bookkeeping
+            # overhead around the executor.compile/execute children
+            with _phase("admit.launch"):
+                valid, decided, frontier, errors = bv.validate_isolated(
+                    table, pad_ids.astype(np.int32), keys=fast_keys
+                )
             sites: List[Optional[FailureSite]] = []
             if explain and any(
                 decided[j] and not valid[j] and j not in errors
@@ -629,64 +633,67 @@ class SchemaRegistry:
                 # argmax over per-row failures (core/explain.py); rows we
                 # don't attribute below are simply ignored
                 try:
-                    sites = bv.explain_batch(
-                        table,
-                        pad_ids.astype(np.int32),
-                        docs=[docs[i] for i in fast] + [None] * pad,
-                    )
+                    with _phase("admit.explain"):
+                        sites = bv.explain_batch(
+                            table,
+                            pad_ids.astype(np.int32),
+                            docs=[docs[i] for i in fast] + [None] * pad,
+                        )
                 except Exception:
                     sites = []  # attribution is best-effort diagnostics
-            for j, i in enumerate(fast):
-                if j in errors:
-                    verdicts[i] = Verdict(
-                        ValidationOutcome.ERROR_ISOLATED,
-                        False,
-                        errors[j],
-                        "batched",
+            with _phase("admit.verdicts"):
+                for j, i in enumerate(fast):
+                    if j in errors:
+                        verdicts[i] = Verdict(
+                            ValidationOutcome.ERROR_ISOLATED,
+                            False,
+                            errors[j],
+                            "batched",
+                        )
+                        counts.error_isolated += 1
+                    elif decided[j]:
+                        ok = bool(valid[j])
+                        site = None if ok or j >= len(sites) else sites[j]
+                        verdicts[i] = Verdict(
+                            ValidationOutcome.ADMITTED
+                            if ok
+                            else ValidationOutcome.INVALID,
+                            ok,
+                            ""
+                            if ok
+                            else (
+                                site.render()
+                                if site is not None
+                                else "schema validation failed"
+                            ),
+                            "batched",
+                            site,
+                        )
+                        counts.batch_validated += 1
+                    elif not table.ok[j]:
+                        counts.oversize += 1  # encoder node/depth budget
+                    elif frontier[j]:
+                        counts.unroll_overflow += 1  # $ref-unroll budget
+                    else:
+                        counts.undecided += 1  # executor depth budget
+        with _phase("admit.verdicts"):
+            for i in range(len(docs)):
+                if verdicts[i] is None:
+                    v = self._bounded_fallback(
+                        endpoints[i], docs[i], row_keys[i], explain=explain
                     )
-                    counts.error_isolated += 1
-                elif decided[j]:
-                    ok = bool(valid[j])
-                    site = None if ok or j >= len(sites) else sites[j]
-                    verdicts[i] = Verdict(
-                        ValidationOutcome.ADMITTED
-                        if ok
-                        else ValidationOutcome.INVALID,
-                        ok,
-                        ""
-                        if ok
-                        else (
-                            site.render()
-                            if site is not None
-                            else "schema validation failed"
-                        ),
-                        "batched",
-                        site,
-                    )
-                    counts.batch_validated += 1
-                elif not table.ok[j]:
-                    counts.oversize += 1  # encoder node/depth budget
-                elif frontier[j]:
-                    counts.unroll_overflow += 1  # $ref-unroll budget
-                else:
-                    counts.undecided += 1  # executor depth budget
-        for i in range(len(docs)):
-            if verdicts[i] is None:
-                v = self._bounded_fallback(
-                    endpoints[i], docs[i], row_keys[i], explain=explain
-                )
-                verdicts[i] = v
-                if v.outcome in (
-                    ValidationOutcome.ADMITTED,
-                    ValidationOutcome.INVALID,
-                ):
-                    counts.fallback_validated += 1
-                elif v.outcome is ValidationOutcome.TIMED_OUT:
-                    counts.timed_out += 1
-                elif v.outcome is ValidationOutcome.UNDECIDED_FALLBACK:
-                    counts.breaker_open += 1
-                else:
-                    counts.error_isolated += 1
+                    verdicts[i] = v
+                    if v.outcome in (
+                        ValidationOutcome.ADMITTED,
+                        ValidationOutcome.INVALID,
+                    ):
+                        counts.fallback_validated += 1
+                    elif v.outcome is ValidationOutcome.TIMED_OUT:
+                        counts.timed_out += 1
+                    elif v.outcome is ValidationOutcome.UNDECIDED_FALLBACK:
+                        counts.breaker_open += 1
+                    else:
+                        counts.error_isolated += 1
         return verdicts, counts  # type: ignore[return-value]
 
     # -- bounded sequential fallback (the second degradation rung) -----------
@@ -738,7 +745,9 @@ class SchemaRegistry:
                 deadline_s=self.fallback_deadline_s,
                 clock=self.clock,
             )
-            with _span("registry.fallback", endpoint=endpoint):
+            with _phase("fallback.sequential"), _span(
+                "registry.fallback", endpoint=endpoint
+            ):
                 ok = self.get(endpoint).validator.is_valid_bounded(
                     doc, budget=budget
                 )

@@ -32,7 +32,10 @@ from ..core.outcomes import ValidationOutcome
 from ..data import tokenizer
 from ..models.config import ArchConfig
 from ..models.model import Model
+from ..obs.events import EventLog
 from ..obs.metrics import DEFAULT_LATENCY_BUCKETS, Histogram, MetricRegistry
+from ..obs.profile import phase as _phase
+from ..obs.slo import SLObjective, slo_status
 from ..obs.stats import RegistryBackedStats
 from ..obs.trace import span as _span
 from ..registry import SchemaRegistry
@@ -66,6 +69,11 @@ class ServeConfig:
     default_max_tokens: int = 32
     greedy: bool = True
     admission_max_nodes: int = 128  # token-table budget for submit_batch
+
+
+# default latency objective: 99% of requests within 100ms (a bucket edge
+# is deliberately NOT required -- obs/slo.py interpolates; see §13)
+DEFAULT_SLO = SLObjective(objective_s=0.1, target=0.99)
 
 
 @dataclass
@@ -210,11 +218,21 @@ class ServeEngine:
         request_schema: Optional[Dict[str, Any]] = None,
         endpoint_schemas: Optional[Dict[str, Any]] = None,
         registry: Optional[SchemaRegistry] = None,
+        events: Optional[EventLog] = None,
+        slo: Optional[SLObjective] = None,
     ):
         self.cfg = cfg
         self.model = Model(cfg)
         self.params = params
         self.scfg = serve_cfg
+        # sampled request-event ring (obs/events.py); None = detached,
+        # and the hot path pays exactly one None check per request
+        self.events = events
+        self._batch_seq = 0  # submit_batch launch counter -> batch ids
+        # per-endpoint latency objectives (obs/slo.py); endpoints without
+        # an override share the engine default
+        self.slo_default = slo if slo is not None else DEFAULT_SLO
+        self._slo: Dict[str, SLObjective] = {}
         # compiled ONCE per endpoint; validated per request -- the paper's
         # AOT bet (codegen engine on the request-critical path).  The
         # registry also links all batchable endpoint tapes for
@@ -292,6 +310,7 @@ class ServeEngine:
             breaker = self.registry.breaker(endpoint)
             per["breaker_state"] = breaker.state
             per["breaker_trips"] = breaker.trips
+            per["slo"] = self.slo_status(endpoint)
             out[endpoint] = per
         return out
 
@@ -308,12 +327,55 @@ class ServeEngine:
             )
         return h
 
+    # -- SLO tracking (obs/slo.py, DESIGN.md §13) -----------------------------
+
+    def set_slo(self, endpoint: str, objective: SLObjective) -> None:
+        """Override the latency objective for one endpoint."""
+        self._slo[endpoint] = objective
+
+    def slo_status(self, endpoint: str) -> Dict[str, Any]:
+        """Cumulative SLO view of one endpoint, computed straight from
+        its ``serve_request_seconds`` histogram -- no second measurement
+        path.  Also refreshes the exported SLO gauges, so calling this
+        (or :meth:`endpoint_stats`/:meth:`render_metrics`) keeps the
+        Prometheus surface current."""
+        objective = self._slo.get(endpoint, self.slo_default)
+        st = slo_status(self._latency(endpoint), objective)
+        m = self.registry.metrics
+        m.gauge(
+            "serve_slo_good_ratio",
+            "fraction of requests within the endpoint's latency objective",
+            endpoint=endpoint,
+        ).set(st["good_ratio"])
+        m.gauge(
+            "serve_slo_burn_rate",
+            "error-budget burn rate (1.0 = budget consumed exactly on time)",
+            endpoint=endpoint,
+        ).set(st["burn_rate"])
+        return st
+
+    # -- event log (obs/events.py, DESIGN.md §13) -----------------------------
+
+    def attach_event_log(self, events: Optional[EventLog]) -> None:
+        """Attach (or detach with None) the sampled request-event ring."""
+        self.events = events
+
+    def flush_events(self, dest) -> int:
+        """Flush the attached event ring to ``dest`` (path or file
+        object) as JSONL; returns the record count (0 when detached)."""
+        if self.events is None:
+            return 0
+        return self.events.flush(dest)
+
     def metrics_snapshot(self) -> Dict[str, Any]:
         """JSON-ready snapshot of the shared metric registry."""
         return self.registry.metrics.snapshot()
 
     def render_metrics(self) -> str:
-        """Prometheus exposition of the shared metric registry."""
+        """Prometheus exposition of the shared metric registry
+        (SLO gauges refreshed first so they are never stale)."""
+        for endpoint in self.registry.endpoints():
+            self.slo_status(endpoint)
         return self.registry.metrics.render_prometheus()
 
     @property
@@ -341,19 +403,42 @@ class ServeEngine:
         the generic message.  The default path is unchanged.
         """
         t_start = time.perf_counter()
+        # per-stage timings flow into the sampled event record only when
+        # a log is attached (stages=None keeps the hot path timer-free)
+        stages: Optional[Dict[str, float]] = {} if self.events is not None else None
+        result: Optional[SubmitResult] = None
         try:
             with _span("serve.submit", endpoint=endpoint):
-                return self._submit_one(request_json, endpoint, explain)
+                result = self._submit_one(request_json, endpoint, explain, stages)
+                return result
         finally:
             label = endpoint if endpoint in self.registry else "__unknown__"
-            self._latency(label).observe(time.perf_counter() - t_start)
+            latency = time.perf_counter() - t_start
+            self._latency(label).observe(latency)
+            ev = self.events
+            if ev is not None and ev.want():
+                ev.emit(
+                    kind="submit",
+                    endpoint=label,
+                    request_id=None if result is None else result.request_id,
+                    outcome="error" if result is None else result.outcome.value,
+                    latency_s=latency,
+                    stages=stages or {},
+                )
 
     def _submit_one(
-        self, request_json: str, endpoint: str, explain: bool
+        self,
+        request_json: str,
+        endpoint: str,
+        explain: bool,
+        stages: Optional[Dict[str, float]] = None,
     ) -> SubmitResult:
         self.stats.received += 1
         serial = self.stats.received
+        t0 = time.perf_counter()
         request, err = self._parse(request_json, endpoint)
+        if stages is not None:
+            stages["parse_s"] = time.perf_counter() - t0
         if err:
             return SubmitResult(None, err, ValidationOutcome.REJECTED_GUARD)
         t0 = time.perf_counter()
@@ -361,7 +446,10 @@ class ServeEngine:
             verdict = self.registry.validate_one(
                 endpoint, request, key=("submit", serial), explain=explain
             )
-        self.stats.validation_seconds += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        if stages is not None:
+            stages["validate_s"] = dt
+        self.stats.validation_seconds += dt
         self.stats.record_outcome(verdict.outcome)
         if verdict.outcome in (
             ValidationOutcome.ADMITTED,
@@ -406,29 +494,40 @@ class ServeEngine:
         time amortized evenly over its validated rows, and 0.0 for rows
         rejected before validation (parse/guard).
         """
+        batch_id = self._batch_seq
+        self._batch_seq += 1
         with _span("serve.submit_batch", batch=len(requests)):
             out: List[Optional[SubmitResult]] = [None] * len(requests)
             parsed: List[Tuple[int, str, Any, int]] = []
-            guard_rejected: List[str] = []
-            for i, (endpoint, request_json) in enumerate(requests):
-                self.stats.received += 1
-                serial = self.stats.received
-                request, err = self._parse(request_json, endpoint)
-                if err:
-                    out[i] = SubmitResult(
-                        None, err, ValidationOutcome.REJECTED_GUARD
-                    )
-                    guard_rejected.append(
-                        endpoint if endpoint in self.registry else "__unknown__"
-                    )
-                else:
-                    parsed.append((i, endpoint, request, serial))
+            guard_rejected: List[Tuple[int, str, int]] = []
+            with _phase("serve.parse"):
+                for i, (endpoint, request_json) in enumerate(requests):
+                    self.stats.received += 1
+                    serial = self.stats.received
+                    request, err = self._parse(request_json, endpoint)
+                    if err:
+                        out[i] = SubmitResult(
+                            None, err, ValidationOutcome.REJECTED_GUARD
+                        )
+                        guard_rejected.append(
+                            (
+                                i,
+                                endpoint
+                                if endpoint in self.registry
+                                else "__unknown__",
+                                serial,
+                            )
+                        )
+                    else:
+                        parsed.append((i, endpoint, request, serial))
             if parsed:
                 docs = [r for _, _, r, _ in parsed]
                 endpoints = [e for _, e, _, _ in parsed]
                 keys = [("batch", s) for _, _, _, s in parsed]
                 t0 = time.perf_counter()
-                with _span("serve.validate", batch=len(parsed)):
+                with _phase("serve.validate"), _span(
+                    "serve.validate", batch=len(parsed)
+                ):
                     verdicts, counts = self.registry.admit_mixed_ex(
                         docs,
                         endpoints,
@@ -451,26 +550,56 @@ class ServeEngine:
                     ep_rows[endpoint] = ep_rows.get(endpoint, 0) + 1
                 for endpoint, n in ep_rows.items():
                     self._latency(endpoint).observe_many(per_row, n)
-                for (i, endpoint, request, _), verdict in zip(parsed, verdicts):
-                    self.stats.record_outcome(verdict.outcome)
-                    if verdict.admitted:
-                        out[i] = SubmitResult(
-                            self._enqueue(request, endpoint), "", verdict.outcome
-                        )
-                    else:
-                        self.stats.rejected += 1
-                        self.stats.count(endpoint, "rejected")
-                        if verdict.outcome is ValidationOutcome.INVALID:
-                            err = (
-                                verdict.reason
-                                if verdict.site is not None
-                                else "schema validation failed"
+                ev = self.events
+                with _phase("serve.dispatch"):
+                    for (i, endpoint, request, serial), verdict in zip(
+                        parsed, verdicts
+                    ):
+                        self.stats.record_outcome(verdict.outcome)
+                        if verdict.admitted:
+                            out[i] = SubmitResult(
+                                self._enqueue(request, endpoint),
+                                "",
+                                verdict.outcome,
                             )
                         else:
-                            err = f"{verdict.outcome.value}: {verdict.reason}"
-                        out[i] = SubmitResult(None, err, verdict.outcome)
-            for label in guard_rejected:
+                            self.stats.rejected += 1
+                            self.stats.count(endpoint, "rejected")
+                            if verdict.outcome is ValidationOutcome.INVALID:
+                                err = (
+                                    verdict.reason
+                                    if verdict.site is not None
+                                    else "schema validation failed"
+                                )
+                            else:
+                                err = f"{verdict.outcome.value}: {verdict.reason}"
+                            out[i] = SubmitResult(None, err, verdict.outcome)
+                        if ev is not None and ev.want():
+                            ev.emit(
+                                kind="batch",
+                                batch_id=batch_id,
+                                endpoint=endpoint,
+                                request_id=out[i].request_id,
+                                outcome=verdict.outcome.value,
+                                latency_s=per_row,
+                                stages={
+                                    "validate_s": dt,
+                                    "batch_rows": len(parsed),
+                                },
+                            )
+            ev = self.events
+            for i, label, serial in guard_rejected:
                 self._latency(label).observe(0.0)
+                if ev is not None and ev.want():
+                    ev.emit(
+                        kind="batch",
+                        batch_id=batch_id,
+                        endpoint=label,
+                        request_id=None,
+                        outcome=ValidationOutcome.REJECTED_GUARD.value,
+                        latency_s=0.0,
+                        stages={},
+                    )
             return out  # type: ignore[return-value]
 
     def _parse(self, request_json: str, endpoint: str):

@@ -1,0 +1,137 @@
+"""CI perf gate behavior (scripts/bench_gate.py, DESIGN.md §12/§13).
+
+The contract under test: gated ``us_per_doc`` regressions beyond the
+threshold fail; benchmarks with no committed baseline (first appearance)
+pass with a "new benchmark" note; unreadable baselines are treated as
+absent; unreadable *fresh* results fail; and every run writes the
+machine-readable ``gate_summary.json`` that perf_report.py consumes.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "scripts"))
+
+from bench_gate import gate  # noqa: E402
+
+
+def _git(repo: Path, *args: str) -> None:
+    subprocess.run(
+        ["git", *args],
+        cwd=repo,
+        check=True,
+        capture_output=True,
+        env={
+            "GIT_AUTHOR_NAME": "t",
+            "GIT_AUTHOR_EMAIL": "t@t",
+            "GIT_COMMITTER_NAME": "t",
+            "GIT_COMMITTER_EMAIL": "t@t",
+            "HOME": str(repo),
+            "PATH": "/usr/bin:/bin:/usr/local/bin",
+        },
+    )
+
+
+@pytest.fixture()
+def repo(tmp_path):
+    """A scratch git repo with one committed BENCH baseline."""
+    _git(tmp_path, "init", "-q")
+    results = tmp_path / "results"
+    results.mkdir()
+    (results / "BENCH_alpha.json").write_text(
+        json.dumps({"throughput": {"fast_us_per_doc": 10.0, "docs": 100}})
+    )
+    _git(tmp_path, "add", "-A")
+    _git(tmp_path, "commit", "-q", "-m", "baseline")
+    return tmp_path
+
+
+def _run(repo: Path, threshold: float = 0.25) -> tuple:
+    rc = gate(
+        "HEAD",
+        threshold,
+        results_dir=repo / "results",
+        repo=repo,
+    )
+    summary = json.loads((repo / "results" / "gate_summary.json").read_text())
+    return rc, summary
+
+
+class TestBenchGate:
+    def test_unchanged_results_pass(self, repo):
+        rc, summary = _run(repo)
+        assert rc == 0 and summary["status"] == "pass"
+        assert summary["gated_comparisons"] == 1
+        [cmp] = summary["comparisons"]
+        assert cmp["path"] == "throughput.fast_us_per_doc"
+        assert cmp["verdict"] == "ok"
+
+    def test_regression_beyond_threshold_fails(self, repo):
+        (repo / "results" / "BENCH_alpha.json").write_text(
+            json.dumps({"throughput": {"fast_us_per_doc": 20.0, "docs": 100}})
+        )
+        rc, summary = _run(repo)
+        assert rc == 1 and summary["status"] == "fail"
+        assert "fast_us_per_doc" in summary["failures"][0]
+
+    def test_regression_within_threshold_passes(self, repo):
+        (repo / "results" / "BENCH_alpha.json").write_text(
+            json.dumps({"throughput": {"fast_us_per_doc": 11.0}})
+        )
+        rc, summary = _run(repo)
+        assert rc == 0 and summary["comparisons"][0]["delta_pct"] == pytest.approx(10.0)
+
+    def test_improvements_never_fail(self, repo):
+        (repo / "results" / "BENCH_alpha.json").write_text(
+            json.dumps({"throughput": {"fast_us_per_doc": 1.0}})
+        )
+        rc, _ = _run(repo)
+        assert rc == 0
+
+    def test_new_benchmark_passes_with_note(self, repo):
+        """A BENCH file with no committed baseline (e.g. the first
+        BENCH_serve_load.json) must pass, noted as a new benchmark."""
+        (repo / "results" / "BENCH_newthing.json").write_text(
+            json.dumps({"p99_us_per_doc": 123.0})
+        )
+        rc, summary = _run(repo)
+        assert rc == 0 and summary["status"] == "pass"
+        assert summary["new_benchmarks"] == ["results/BENCH_newthing.json"]
+        # the uncommitted file contributed no gated comparisons
+        assert summary["gated_comparisons"] == 1
+
+    def test_unparseable_baseline_treated_as_new(self, repo):
+        (repo / "results" / "BENCH_broken.json").write_text("{not json")
+        _git(repo, "add", "-A")
+        _git(repo, "commit", "-q", "-m", "broken baseline")
+        (repo / "results" / "BENCH_broken.json").write_text(
+            json.dumps({"x_us_per_doc": 5.0})
+        )
+        rc, summary = _run(repo)
+        assert rc == 0
+        assert "results/BENCH_broken.json" in summary["new_benchmarks"]
+
+    def test_unreadable_fresh_results_fail(self, repo):
+        (repo / "results" / "BENCH_alpha.json").write_text("garbage{")
+        rc, summary = _run(repo)
+        assert rc == 1
+        assert summary["unreadable"] == ["results/BENCH_alpha.json"]
+
+    def test_allowlisted_keys_report_but_never_gate(self, repo):
+        results = repo / "results"
+        (results / "BENCH_noisy.json").write_text(
+            json.dumps({"traced_us_per_doc": 10.0})
+        )
+        _git(repo, "add", "-A")
+        _git(repo, "commit", "-q", "-m", "noisy baseline")
+        (results / "BENCH_noisy.json").write_text(
+            json.dumps({"traced_us_per_doc": 100.0})
+        )
+        rc, summary = _run(repo)
+        assert rc == 0
+        noisy = [c for c in summary["comparisons"] if c["allowlisted"]]
+        assert noisy and noisy[0]["verdict"] == "noisy (allowlisted)"

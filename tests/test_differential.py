@@ -11,6 +11,9 @@ pytest.importorskip("hypothesis", reason="hypothesis not installed in this envir
 from hypothesis import given, settings, strategies as st
 
 from repro.core import CompilerOptions, NaiveValidator, Validator, compile_schema
+from repro.core.batch_executor import BatchValidator
+from repro.core.tape import try_build_tape
+from repro.data.doc_table import encode_batch
 
 # ---------------------------------------------------------------------------
 # Random JSON documents
@@ -202,3 +205,33 @@ def test_empty_schema_accepts_everything(doc):
 @given(doc=json_docs)
 def test_false_schema_rejects_everything(doc):
     assert not Validator(compile_schema(False)).is_valid(doc)
+
+
+@settings(max_examples=40, deadline=None)
+@given(schema=schemas, docs=st.lists(json_docs, min_size=1, max_size=4))
+def test_failure_sites_match_sequential_trace(schema, docs):
+    """Differential attribution, not just verdicts (DESIGN.md §12): on
+    every decided-invalid document the batched ``explain_batch`` site must
+    name a schema location the sequential trace also blames.  Schemas the
+    tape compiler cannot batch are skipped -- the seeded fuzzers in
+    test_logical_circuit/test_recursive_unroll cover their own streams."""
+    compiled = compile_schema(schema)
+    tape, _ = try_build_tape(compiled)
+    if tape is None:
+        return
+    seq = Validator(compiled)
+    table = encode_batch(docs, max_nodes=64, max_depth=8)
+    bv = BatchValidator(tape, max_depth=8, use_pallas=False)
+    valid, decided = bv.validate(table)
+    invalid = [i for i in range(len(docs)) if decided[i] and not valid[i]]
+    if not invalid:
+        return
+    sites = bv.explain_batch(table, docs=docs)
+    for i in invalid:
+        site = sites[i]
+        assert site is not None, (schema, docs[i])
+        ok, trace = seq.explain(docs[i])
+        assert not ok, (schema, docs[i])
+        assert site.schema_path in {p for p, _ in trace}, (
+            schema, docs[i], site, trace
+        )

@@ -372,7 +372,7 @@ def _rand_logical(rng: random.Random, depth: int) -> dict:
 class TestDifferentialFuzz:
     def test_circuits_match_sequential_and_dense(self):
         rng = random.Random(0x10C1C)
-        tapes = circuits = 0
+        tapes = circuits = checked_sites = 0
         for trial in range(80):
             schema = _rand_logical(rng, 3)
             compiled = compile_schema(schema)
@@ -394,4 +394,19 @@ class TestDifferentialFuzz:
             for i, (v, d) in enumerate(zip(v_c, d_c)):
                 if d:
                     assert bool(v) == expected[i], (schema, docs[i])
+            # failure sites, not just verdicts: the batched attribution
+            # must name a keyword location the sequential trace also blames
+            invalid = [i for i, (v, d) in enumerate(zip(v_c, d_c)) if d and not v]
+            if invalid:
+                checked_sites += len(invalid)
+                sites = csr.explain_batch(table, docs=docs)
+                for i in invalid:
+                    site = sites[i]
+                    assert site is not None, (schema, docs[i])
+                    ok, trace = seq.explain(docs[i])
+                    assert not ok, (schema, docs[i])
+                    assert site.schema_path in {p for p, _ in trace}, (
+                        schema, docs[i], site, trace
+                    )
         assert tapes >= 25 and circuits >= 40  # the fuzzer must hit circuits
+        assert checked_sites >= 40  # and the site differential must bite

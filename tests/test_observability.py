@@ -237,6 +237,39 @@ class TestStatsReconciliation:
         # histogram totals == request counts (one observation per request)
         assert _latency_total(engine) == base_lat + 24
 
+    def test_explain_true_observes_once_per_request(self, engine):
+        """The extra explain launch must not add latency observations:
+        exactly one serve_request_seconds entry per received request."""
+        engine.register_endpoint("ep", SCHEMA)
+        base_recv = engine.stats.received
+        base_lat = _latency_total(engine)
+        reqs = [("ep", json.dumps({"a": i - 3})) for i in range(8)]
+        reqs.append(("ep", "{broken"))  # guard reject rides along
+        results = engine.submit_batch(reqs, explain=True)
+        assert len(results) == 9
+        assert any("schema" in (r.error or "") or r.error for r in results)
+        assert engine.stats.received == base_recv + 9
+        assert _latency_total(engine) == base_lat + 9
+        # single-submit explain path observes exactly once too
+        engine.submit(json.dumps({"a": -1}), "ep", explain=True)
+        assert _latency_total(engine) == base_lat + 10
+
+    def test_bisect_retries_observe_once_per_request(self, engine):
+        """Launch faults trigger isolated-bisect relaunches; the retried
+        launches must not multiply latency observations per request."""
+        engine.register_endpoint("ep", SCHEMA)
+        reqs = [("ep", json.dumps({"a": i - 3})) for i in range(16)]
+        base_recv = engine.stats.received
+        base_lat = _latency_total(engine)
+        inj = FaultInjector(seed=13).rate("launch", 0.3)
+        with inj:
+            results = engine.submit_batch(reqs)
+        # the bisection actually relaunched (initial launch + retries)
+        assert inj.fired.get("launch", 0) > 1
+        assert len(results) == 16
+        assert engine.stats.received == base_recv + 16
+        assert _latency_total(engine) == base_lat + 16
+
     def test_admit_mixed_ex_reconciles_under_faults(self):
         reg = SchemaRegistry(use_pallas=False)
         reg.register("ep", SCHEMA)

@@ -366,7 +366,7 @@ def _leaf_value(rng: random.Random, leaf: dict, ok: bool):
 class TestRecursiveDifferentialFuzz:
     def test_fuzz_straddles_unroll_depth(self):
         rng = random.Random(0xF30)
-        decided_total = frontier_total = 0
+        decided_total = frontier_total = sites_total = 0
         # every distinct tape shape jit-compiles two executors: keep the
         # trial count CI-friendly (matching test_batch_csr's budget)
         for trial in range(14):
@@ -395,11 +395,26 @@ class TestRecursiveDifferentialFuzz:
             for i, doc in enumerate(docs):
                 if d[i]:
                     assert bool(v[i]) == seq.is_valid(doc), (schema, doc)
+            # failure sites, not just verdicts: batched attribution on the
+            # decided-invalid rows must agree with the sequential trace
+            invalid = [i for i in range(len(docs)) if d[i] and not v[i]]
+            if invalid:
+                sites_total += len(invalid)
+                sites = csr.explain_batch(table, docs=docs)
+                for i in invalid:
+                    site = sites[i]
+                    assert site is not None, (schema, docs[i])
+                    ok, trace = seq.explain(docs[i])
+                    assert not ok, (schema, docs[i])
+                    assert site.schema_path in {p for p, _ in trace}, (
+                        schema, docs[i], site, trace
+                    )
             decided_total += int(d.sum())
             frontier_total += int(f.sum())
         # the fuzzer must exercise both sides of the budget
         assert decided_total >= 30
         assert frontier_total >= 15
+        assert sites_total >= 10  # and the site differential must bite
 
 
 class TestMixedRegistryWithRecursion:
