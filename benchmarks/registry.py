@@ -236,6 +236,54 @@ def run(report: Dict[str, object]) -> List[str]:
             f"linked_x_dispatch={row['linked_speedup_vs_dispatch']:.2f}"
         )
 
+    # -- link groups (DESIGN.md §14): window shrinkage vs the global tape --
+    # The union member (charge) inflates the global linked windows to the
+    # member maxima (Â 3->6, M-hat 4->8).  The group partition confines
+    # that: report each group's local windows and the worst non-union
+    # inflation ratio against the union-free reference (all members
+    # minus the union endpoint linked together).
+    from repro.registry import link_tapes
+
+    union_free = link_tapes(
+        tapes=[reg.get(ep).tape for ep in SCHEMAS if ep != "charge"],
+        names=[ep for ep in SCHEMAS if ep != "charge"],
+    )
+    group_rows = {}
+    worst_a = worst_m = 0.0
+    for label, gs in reg.group_stats().items():
+        non_union = "charge" not in gs["members"]
+        ratio_a = gs["a_hat"] / union_free.max_rows_per_loc
+        ratio_m = gs["m_hat"] / union_free.max_member_props
+        if non_union:
+            worst_a = max(worst_a, ratio_a)
+            worst_m = max(worst_m, ratio_m)
+        group_rows[label] = {
+            **{k: gs[k] for k in ("members", "a_hat", "m_hat", "k", "horizon")},
+            "signature_class": gs["signature_class"],
+            "non_union": non_union,
+            "a_hat_vs_union_free": round(ratio_a, 3),
+            "m_hat_vs_union_free": round(ratio_m, 3),
+        }
+    # acceptance: non-union traffic within 1.2x of its union-free windows
+    assert worst_a <= 1.2 and worst_m <= 1.2, (worst_a, worst_m)
+
+    # differential: group-partitioned admission is bit-identical to the
+    # legacy single-tape fast path, verdict for verdict
+    reg_flat = SchemaRegistry(use_pallas=False, link_grouping=False)
+    for name, schema in SCHEMAS.items():
+        reg_flat.register(name, schema)
+    diff_docs, diff_eps = _mixed_stream(256, random.Random(0xD1FF))
+    grouped_v, _ = reg.admit_mixed_ex(diff_docs, diff_eps, max_nodes=MAX_NODES)
+    flat_v, _ = reg_flat.admit_mixed_ex(diff_docs, diff_eps, max_nodes=MAX_NODES)
+    assert [(v.outcome, v.valid) for v in grouped_v] == [
+        (v.outcome, v.valid) for v in flat_v
+    ]
+    lines.append(
+        f"registry/link_groups,{len(group_rows)},"
+        f"worst_non_union_a_hat_ratio={worst_a:.2f};"
+        f"worst_non_union_m_hat_ratio={worst_m:.2f}"
+    )
+
     payload = {
         "schemas": list(SCHEMAS),
         "mix_weights": dict(MIX),
@@ -249,6 +297,16 @@ def run(report: Dict[str, object]) -> List[str]:
             "k": linked.max_hash_run,
             "max_loc_depth": linked.max_loc_depth,
             "member_horizons": linked.member_horizons.tolist(),
+        },
+        "link_groups": {
+            "groups": group_rows,
+            "union_free_reference": {
+                "a_hat": int(union_free.max_rows_per_loc),
+                "m_hat": int(union_free.max_member_props),
+            },
+            "worst_non_union_a_hat_ratio": round(worst_a, 3),
+            "worst_non_union_m_hat_ratio": round(worst_m, 3),
+            "grouped_vs_flat_bit_identical": True,
         },
         "throughput": rows,
     }

@@ -8,32 +8,38 @@ arrivals are a seeded Poisson process whose timestamps are fixed up
 front, independent of how the server keeps up, so queueing delay past
 the saturation knee shows up honestly in the tail percentiles.
 
-Mechanics: the engine is synchronous, so the driver maintains a virtual
-clock.  Requests arrive at exponential inter-arrival gaps; the server
-starts its next launch at ``max(server_free, first_arrival)``, admits
-every request that has arrived by then (capped at ``MAX_BATCH``) through
-``ServeEngine.submit_batch``, and bills each request
-``completion - arrival`` -- service time measured on the real wall
-clock, queueing implied by the arrival process.  One request per launch
-degenerates to ``ServeEngine.submit``-equivalent latency; bursts
-amortize, exactly the continuous-batching trade the ROADMAP wants
-arrival-rate sweeps over.
+Two runtimes share the same arrival streams (``--runtime`` axis):
+
+- **batch** -- the PR 8 synchronous baseline: the driver admits every
+  arrived request at once through ``ServeEngine.submit_batch`` (the
+  "caller hands us a batch" model).
+- **stream** -- the §14 scheduler: each request is ``offer``-ed at its
+  arrival instant, queues on its link group's lane, and drains when its
+  latency budget expires or the lane fills; the cost model routes each
+  drain batched-vs-sequential.
+
+Mechanics: the engines are synchronous, so the driver maintains a
+virtual clock; service time is measured on the real wall clock and
+queueing is implied by the fixed arrival process.  The offer/parse wall
+is billed into server busy time for the stream runtime too, so the
+comparison between runtimes stays honest.
 
 Emits ``results/BENCH_serve_load.json``: p50/p99/p999 latency per
-offered rate plus queue-depth / in-flight gauge time series, and keeps
-the shared MetricRegistry's ``serve_queue_depth`` / ``serve_inflight``
-gauges fresh per launch so the Prometheus export carries the final
-state.
+offered rate for each runtime (``rates`` keeps its PR 8 meaning --
+the batch baseline -- so committed gate baselines keep comparing),
+plus a ``stream_vs_batch`` p99 comparison per shared rate, queue-depth
+gauge series, and scheduler/cost-model snapshots.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import random
 import time
 from pathlib import Path
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -47,6 +53,10 @@ RATES = (500.0, 2000.0, 8000.0)
 # and the compiles -- not the sweep itself -- dominate a short run)
 REQUESTS_PER_RATE = int(os.environ.get("SERVE_LOAD_REQUESTS", "1024"))
 MAX_BATCH = int(os.environ.get("SERVE_LOAD_MAX_BATCH", "256"))
+# which runtimes to sweep: "batch", "stream", or "both"
+RUNTIME = os.environ.get("SERVE_LOAD_RUNTIME", "both")
+# stream admission deadline (seconds a request may wait for riders)
+STREAM_MAX_DELAY_S = float(os.environ.get("SERVE_LOAD_MAX_DELAY_S", "0.002"))
 TRACE_POINTS = 64  # gauge samples kept per rate (decimated time series)
 RESULTS = Path(__file__).resolve().parents[1] / "results"
 
@@ -85,8 +95,19 @@ def _requests(n: int, rng: random.Random) -> List:
     ]
 
 
+def _percentile_row(latencies: np.ndarray) -> Dict[str, float]:
+    p50, p99, p999 = np.percentile(latencies, [50.0, 99.0, 99.9])
+    return {
+        "p50_ms": float(p50) * 1e3,
+        "p99_ms": float(p99) * 1e3,
+        "p999_ms": float(p999) * 1e3,
+        "mean_ms": float(latencies.mean()) * 1e3,
+    }
+
+
 def _sweep_rate(engine, requests, rate: float, rng: random.Random) -> Dict:
-    """One offered-load point: virtual-clock open-loop simulation."""
+    """One offered-load point, batch runtime: the PR 8 synchronous
+    baseline (admit everything arrived in one ``submit_batch``)."""
     n = len(requests)
     arrivals = np.cumsum(rng_exponential(rng, n, rate))
     latencies = np.zeros(n)
@@ -133,20 +154,82 @@ def _sweep_rate(engine, requests, rate: float, rng: random.Random) -> Dict:
     if len(trace) > TRACE_POINTS:
         stride = len(trace) / TRACE_POINTS
         trace = [trace[int(i * stride)] for i in range(TRACE_POINTS)]
-    p50, p99, p999 = np.percentile(latencies, [50.0, 99.0, 99.9])
     makespan = max(float(arrivals[-1]), free)
     return {
         "offered_rate_per_s": rate,
         "requests": n,
         "launches": launches,
         "mean_batch": n / launches,
-        "p50_ms": float(p50) * 1e3,
-        "p99_ms": float(p99) * 1e3,
-        "p999_ms": float(p999) * 1e3,
-        "mean_ms": float(latencies.mean()) * 1e3,
+        **_percentile_row(latencies),
         "achieved_rate_per_s": n / makespan,
         "utilization": busy_s / makespan,
         "max_queue_depth": max(t["queue_depth"] for t in trace),
+        "gauges": trace,
+    }
+
+
+def _sweep_rate_stream(engine, scheduler, requests, rate: float, rng: random.Random) -> Dict:
+    """One offered-load point, stream runtime: requests are offered at
+    their arrival instants and the §14 scheduler decides when (and how)
+    to drain.  Offer/parse wall is billed into server busy time so the
+    stream runtime gets no free parsing relative to the batch baseline.
+    """
+    n = len(requests)
+    arrivals = np.cumsum(rng_exponential(rng, n, rate))
+    tickets: List[Optional[object]] = [None] * n
+    trace: List[Dict[str, float]] = []
+    now = 0.0
+    idx = 0
+    busy_s = 0.0
+    drains = 0
+    max_depth = 0
+    while idx < n or scheduler.depth():
+        fire = scheduler.next_fire_s(now=now)
+        next_arrival = arrivals[idx] if idx < n else None
+        if next_arrival is not None and (fire is None or next_arrival <= fire):
+            now = max(now, float(next_arrival))
+            endpoint, request_json = requests[idx]
+            t0 = time.perf_counter()
+            tickets[idx] = scheduler.offer(endpoint, request_json, now=now)
+            wall = time.perf_counter() - t0
+            busy_s += wall
+            now += wall
+            idx += 1
+            continue
+        if fire is not None:
+            now = max(now, fire)
+        r = scheduler.drain(now=now, force=idx >= n)
+        if r is None:
+            continue
+        busy_s += r.wall_s
+        now += r.wall_s
+        drains += 1
+        max_depth = max(max_depth, scheduler.depth() + r.n)
+        trace.append(
+            {
+                "t_s": round(now - r.wall_s, 6),
+                "lane": r.lane,
+                "route": r.route,
+                "in_flight": r.n,
+                "launch_wall_s": round(r.wall_s, 6),
+            }
+        )
+    latencies = np.array([t.latency_s for t in tickets])
+    queue_delays = np.array([t.queue_delay_s for t in tickets])
+    if len(trace) > TRACE_POINTS:
+        stride = len(trace) / TRACE_POINTS
+        trace = [trace[int(i * stride)] for i in range(TRACE_POINTS)]
+    makespan = max(float(arrivals[-1]), now)
+    return {
+        "offered_rate_per_s": rate,
+        "requests": n,
+        "launches": drains,
+        "mean_batch": n / max(drains, 1),
+        **_percentile_row(latencies),
+        "queue_delay_p99_us": float(np.percentile(queue_delays, 99.0)) * 1e6,
+        "achieved_rate_per_s": n / makespan,
+        "utilization": busy_s / makespan,
+        "max_queue_depth": max_depth,
         "gauges": trace,
     }
 
@@ -157,49 +240,145 @@ def rng_exponential(rng: random.Random, n: int, rate: float) -> np.ndarray:
     return np.asarray([rng.expovariate(rate) for _ in range(n)])
 
 
-def run(report: Dict[str, object]) -> List[str]:
-    lines: List[str] = []
-    rng = random.Random(0xA221)
-    engine = _build_engine()
+def _warm(engine) -> None:
+    """Warm every power-of-two launch shape up to MAX_BATCH once so the
+    sweep measures steady-state serving, not jit traces (a cold-start
+    sweep is a different experiment; record the warm one).
 
-    # warm every power-of-two launch shape up to MAX_BATCH once so the
-    # sweep measures steady-state serving, not jit traces (a cold-start
-    # sweep is a different experiment; record the warm one)
-    warm = _requests(MAX_BATCH, rng)
+    Group-partitioned admission splits a mixed batch into per-group
+    sub-batches whose pow2 buckets depend on the traffic mix, so the
+    submit_batch warm alone no longer covers every launch shape --
+    ``warm_groups`` pre-traces each link group's validator at every
+    pow2 bucket directly."""
+    sizes = []
     size = 1
     while size <= MAX_BATCH:
-        engine.submit_batch(warm[:size])
+        sizes.append(size)
         size *= 2
+    engine.registry.warm_groups(sizes, max_nodes=MAX_NODES)
+    rng = random.Random(0xA220)
+    warm = _requests(MAX_BATCH, rng)
+    for size in sizes:
+        engine.submit_batch(warm[:size])
 
-    rows = []
-    for rate in RATES:
-        requests = _requests(REQUESTS_PER_RATE, rng)
-        row = _sweep_rate(engine, requests, rate, rng)
-        rows.append(row)
-        lines.append(
-            f"serve_load/rate_{int(rate)},{row['p50_ms'] * 1e3:.1f},"
-            f"p99_ms={row['p99_ms']:.3f};p999_ms={row['p999_ms']:.3f};"
-            f"mean_batch={row['mean_batch']:.1f};util={row['utilization']:.2f}"
-        )
 
-    payload = {
+def run(report: Dict[str, object], runtime: Optional[str] = None) -> List[str]:
+    lines: List[str] = []
+    runtime = runtime or RUNTIME
+    sweep_batch = runtime in ("batch", "both")
+    sweep_stream = runtime in ("stream", "both")
+
+    payload: Dict[str, object] = {
         "requests_per_rate": REQUESTS_PER_RATE,
         "max_batch": MAX_BATCH,
         "max_nodes": MAX_NODES,
         "arrival_process": "poisson(seeded, open-loop, virtual clock)",
-        "rates": rows,
-        "endpoint_slo": {
+        "runtime_axis": runtime,
+    }
+
+    batch_rows: List[Dict] = []
+    if sweep_batch:
+        rng = random.Random(0xA221)
+        engine = _build_engine()
+        _warm(engine)
+        for rate in RATES:
+            requests = _requests(REQUESTS_PER_RATE, rng)
+            row = _sweep_rate(engine, requests, rate, rng)
+            batch_rows.append(row)
+            lines.append(
+                f"serve_load/batch_rate_{int(rate)},{row['p50_ms'] * 1e3:.1f},"
+                f"p99_ms={row['p99_ms']:.3f};p999_ms={row['p999_ms']:.3f};"
+                f"mean_batch={row['mean_batch']:.1f};util={row['utilization']:.2f}"
+            )
+        # "rates" keeps its PR 8 meaning (batch-runtime rows) so the
+        # committed p99_ms gate baselines keep comparing across the
+        # runtime-axis change
+        payload["rates"] = batch_rows
+        payload["endpoint_slo"] = {
             e: {
                 k: v
                 for k, v in engine.slo_status(e).items()
                 if k in ("objective_s", "target", "good_ratio", "burn_rate", "count")
             }
             for e in engine.registry.endpoints()
-        },
-    }
+        }
+
+    stream_rows: List[Dict] = []
+    if sweep_stream:
+        # fresh engine + metrics: the stream runtime's histograms must
+        # not mix with the batch baseline's
+        rng = random.Random(0xA221)  # same seed -> same arrival streams
+        engine = _build_engine()
+        _warm(engine)
+        scheduler = engine.scheduler(
+            max_delay_s=STREAM_MAX_DELAY_S, max_batch=MAX_BATCH
+        )
+        for rate in RATES:
+            requests = _requests(REQUESTS_PER_RATE, rng)
+            row = _sweep_rate_stream(engine, scheduler, requests, rate, rng)
+            stream_rows.append(row)
+            lines.append(
+                f"serve_load/stream_rate_{int(rate)},{row['p50_ms'] * 1e3:.1f},"
+                f"p99_ms={row['p99_ms']:.3f};p999_ms={row['p999_ms']:.3f};"
+                f"mean_batch={row['mean_batch']:.1f};util={row['utilization']:.2f}"
+            )
+        payload["stream_rates"] = stream_rows
+        payload["stream"] = {
+            "max_delay_s": STREAM_MAX_DELAY_S,
+            "scheduler": scheduler.snapshot(),
+        }
+        payload["stream_endpoint_slo"] = {
+            e: {
+                k: v
+                for k, v in engine.slo_status(e).items()
+                if k in ("objective_s", "target", "good_ratio", "burn_rate", "count")
+            }
+            for e in engine.registry.endpoints()
+        }
+
+    if sweep_batch and sweep_stream:
+        comparison = []
+        for b, s in zip(batch_rows, stream_rows):
+            comparison.append(
+                {
+                    "offered_rate_per_s": b["offered_rate_per_s"],
+                    "batch_p99_ms": b["p99_ms"],
+                    "stream_p99_ms": s["p99_ms"],
+                    "stream_speedup_p99": b["p99_ms"] / s["p99_ms"]
+                    if s["p99_ms"] > 0
+                    else 0.0,
+                }
+            )
+        payload["stream_vs_batch"] = comparison
+        for c in comparison:
+            lines.append(
+                f"serve_load/stream_vs_batch_{int(c['offered_rate_per_s'])},"
+                f"{c['stream_p99_ms'] * 1e3:.1f},"
+                f"batch_p99_ms={c['batch_p99_ms']:.3f};"
+                f"speedup={c['stream_speedup_p99']:.2f}x"
+            )
+
     RESULTS.mkdir(parents=True, exist_ok=True)
     out = RESULTS / "BENCH_serve_load.json"
     out.write_text(json.dumps(payload, indent=2) + "\n")
     report["serve_load"] = payload
     lines.append(f"# wrote {out}")
     return lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--runtime",
+        choices=("batch", "stream", "both"),
+        default=RUNTIME,
+        help="which serve runtime(s) to sweep",
+    )
+    args = ap.parse_args()
+    report: Dict[str, object] = {}
+    for line in run(report, runtime=args.runtime):
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,10 +10,11 @@ results)::
 For every ``results/BENCH_*.json`` present in the working tree, the gate
 loads the version committed at ``--ref`` via ``git show`` and walks both
 JSON trees in parallel.  Numeric leaves whose key ends in
-``us_per_doc`` are latency-style (lower is better) and **gated**: a
-fresh value more than ``threshold`` (default 25%) above the committed
-value fails the gate.  Everything else -- counts, percentages,
-throughputs -- is informational only.
+``us_per_doc`` (per-doc latency) or ``p99_ms`` (serve-load tail
+latency at an offered rate) are latency-style (lower is better) and
+**gated**: a fresh value more than ``threshold`` (default 25%) above
+the committed value fails the gate.  Everything else -- counts,
+percentages, throughputs -- is informational only.
 
 Noisy fields that legitimately swing run-to-run sit on an allowlist and
 are reported but never gated:
@@ -46,7 +47,7 @@ from typing import Any, Dict, Iterator, List, Optional, Tuple
 REPO = Path(__file__).resolve().parents[1]
 RESULTS = REPO / "results"
 
-GATED_SUFFIX = "us_per_doc"
+GATED_SUFFIXES = ("us_per_doc", "p99_ms")
 ALLOWLIST = {"traced_us_per_doc", "total_us_per_doc"}
 
 
@@ -119,7 +120,7 @@ def gate(
             continue
         base_leaves = {p: v for p, _, v in _leaves(base)}
         for dotted, key, new in _leaves(fresh):
-            if not key.endswith(GATED_SUFFIX):
+            if not key.endswith(GATED_SUFFIXES):
                 continue
             old = base_leaves.get(dotted)
             if old is None or old <= 0:
@@ -134,7 +135,7 @@ def gate(
                 else:
                     verdict = "FAIL"
                     failures.append(
-                        f"{rel}:{dotted}: {old:.3f} -> {new:.3f} us/doc "
+                        f"{rel}:{dotted}: {old:.3f} -> {new:.3f} "
                         f"(+{delta * 100:.1f}% > {threshold * 100:.0f}%)"
                     )
             gated += key not in ALLOWLIST

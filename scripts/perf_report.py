@@ -104,6 +104,23 @@ def collect(results_dir: Path = RESULTS) -> Dict[str, Any]:
                 }
                 for row in bench.get("rates", [])
             ]
+            entry["stream_rates"] = [
+                {
+                    k: row[k]
+                    for k in (
+                        "offered_rate_per_s",
+                        "p50_ms",
+                        "p99_ms",
+                        "p999_ms",
+                        "mean_batch",
+                        "utilization",
+                        "max_queue_depth",
+                    )
+                    if k in row
+                }
+                for row in bench.get("stream_rates", [])
+            ]
+            entry["stream_vs_batch"] = bench.get("stream_vs_batch", [])
             entry["endpoint_slo"] = bench.get("endpoint_slo", {})
         if name == "observability" and "profile" in bench:
             prof = bench["profile"]
@@ -176,6 +193,19 @@ def render_markdown(report: Dict[str, Any]) -> str:
                 f"| {row['p50_ms']:.2f} | {row['p99_ms']:.2f} "
                 f"| {row['p999_ms']:.2f} | {row['mean_batch']:.1f} "
                 f"| {row['utilization']:.2f} | {row['max_queue_depth']} |"
+            )
+        out.append("")
+    if serve.get("stream_vs_batch"):
+        out.append("## Stream scheduler vs synchronous batch (p99)")
+        out.append("")
+        out.append("| offered/s | batch p99 ms | stream p99 ms | speedup |")
+        out.append("|---:|---:|---:|---:|")
+        for row in serve["stream_vs_batch"]:
+            out.append(
+                f"| {row['offered_rate_per_s']:.0f} "
+                f"| {row['batch_p99_ms']:.2f} "
+                f"| {row['stream_p99_ms']:.2f} "
+                f"| {row['stream_speedup_p99']:.1f}x |"
             )
         out.append("")
     if serve.get("endpoint_slo"):

@@ -370,6 +370,23 @@ class BatchValidator:
         decided = in_depth & ~frontier & np.asarray(table.ok)
         return valid, decided, frontier & np.asarray(table.ok)
 
+    def seen_shapes(self) -> set:
+        """Snapshot of the (B, max_nodes) launch shapes already traced."""
+        return set(self._seen_shapes)
+
+    def warm(self, table, schema_ids=None) -> bool:
+        """Pre-trace the launch for ``table``'s shape off the request
+        path; returns True when a new shape was actually compiled.
+
+        Streaming schedulers admit power-of-two buckets precisely so
+        this set stays tiny; warming the expected buckets ahead of
+        traffic keeps jit traces out of deadline-bounded drains.
+        """
+        if (table.batch, table.max_nodes) in self._seen_shapes:
+            return False
+        self.validate_ex(table, schema_ids)
+        return True
+
     def _normalize_ids(self, B: int, schema_ids) -> np.ndarray:
         if schema_ids is None:
             if self.tape.n_members > 1:

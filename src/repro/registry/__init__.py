@@ -1,14 +1,25 @@
 """Multi-tenant schema estate: registry + tape linker.
 
 ``registry.py`` owns compiled-schema versions per endpoint id;
-``linker.py`` relocates and concatenates their location tapes into one
-linked tape so a mixed-endpoint batch validates in a single batched
-kernel launch (DESIGN.md §8).
+``linker.py`` relocates and concatenates member location tapes into
+linked tapes so a mixed-endpoint batch validates in few batched kernel
+launches (DESIGN.md §8).  Members are partitioned into **link groups**
+of compatible (Â, M̂, horizon) signature classes (DESIGN.md §14) so one
+window-fat member does not inflate every other endpoint's launches.
 """
 
-from .linker import LinkedTape, TapeSegment, link_tapes, segment_tape
+from .linker import (
+    LinkedTape,
+    TapeSegment,
+    group_signature,
+    link_tapes,
+    pow2_class,
+    segment_tape,
+    signature_label,
+)
 from .registry import (
     AdmitCounts,
+    LinkGroup,
     RegistrationError,
     SchemaEntry,
     SchemaRegistry,
@@ -20,7 +31,11 @@ __all__ = [
     "TapeSegment",
     "link_tapes",
     "segment_tape",
+    "group_signature",
+    "signature_label",
+    "pow2_class",
     "AdmitCounts",
+    "LinkGroup",
     "RegistrationError",
     "SchemaEntry",
     "SchemaRegistry",

@@ -59,7 +59,60 @@ import numpy as np
 
 from ..core.tape import LocationTape
 
-__all__ = ["LinkedTape", "TapeSegment", "segment_tape", "link_tapes"]
+__all__ = [
+    "LinkedTape",
+    "TapeSegment",
+    "segment_tape",
+    "link_tapes",
+    "pow2_class",
+    "group_signature",
+    "signature_label",
+]
+
+
+# ---------------------------------------------------------------------------
+# Link-group signatures (DESIGN.md §14)
+#
+# Linking inflates every member to the group maxima: Â (assertion window
+# per node), M̂ (the member-windowed hash pass scans the fattest member's
+# property rows) and the horizon (depth-loop trip count) all recompute as
+# maxima over the linked members (§8).  One fat member therefore taxes
+# every other member's launches -- the `charge` tagged union raising the
+# shared Â 3→6 / M̂ 4→8 is the motivating case.  The registry avoids
+# this by partitioning members into **link groups** of compatible
+# signatures and cutting one linked tape per group.
+#
+# Compatibility is an equivalence relation so the partition is
+# deterministic and independent of registration order: each window
+# dimension is bucketed into its power-of-two ceiling class, and members
+# sharing the class triple `(Â-class, M̂-class, horizon-class)` link
+# together.  Within a group every dimension's linked maximum is bounded
+# by the class, and any member sits within 2x of the group maximum
+# (members of one class c all lie in (c/2, c]) -- in practice far
+# closer, because the group constant is the max over *actual* member
+# values, not the class ceiling.
+# ---------------------------------------------------------------------------
+
+
+def pow2_class(x: int) -> int:
+    """Smallest power of two >= max(x, 1)."""
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def group_signature(tape: LocationTape) -> Tuple[int, int, int]:
+    """The tape's link-group compatibility class: power-of-two ceilings
+    of (Â, M̂, horizon) -- the three launch-cost constants that linking
+    inflates to member maxima (§8)."""
+    return (
+        pow2_class(tape.max_rows_per_loc),
+        pow2_class(tape.n_props),
+        pow2_class(tape.max_loc_depth + 1),
+    )
+
+
+def signature_label(key: Tuple[int, int, int]) -> str:
+    """Stable human-readable label for a group key (metrics/label-safe)."""
+    return f"a{key[0]}.m{key[1]}.h{key[2]}"
 
 
 @dataclass

@@ -56,13 +56,21 @@ from ..core.tape import DEFAULT_UNROLL_DEPTH, LocationTape, try_build_tape
 from ..obs.metrics import MetricRegistry
 from ..obs.profile import phase as _phase
 from ..obs.trace import span as _span
-from .linker import LinkedTape, TapeSegment, link_tapes, segment_tape
+from .linker import (
+    LinkedTape,
+    TapeSegment,
+    group_signature,
+    link_tapes,
+    segment_tape,
+    signature_label,
+)
 
 __all__ = [
     "SchemaStats",
     "SchemaEntry",
     "SchemaRegistry",
     "AdmitCounts",
+    "LinkGroup",
     "RegistrationError",
 ]
 
@@ -75,7 +83,7 @@ class RegistrationError(RuntimeError):
 class AdmitCounts:
     """How a mixed stream's verdicts were produced (admit_mixed)."""
 
-    batch_validated: int = 0  # decided by the linked-tape launch
+    batch_validated: int = 0  # decided by a linked-tape (group) launch
     undecided: int = 0  # batchable but past the depth budget -> fallback
     oversize: int = 0  # batchable but past the encoder node budget -> fallback
     unroll_overflow: int = 0  # recursion outran the $ref-unroll budget -> fallback
@@ -85,6 +93,43 @@ class AdmitCounts:
     error_isolated: int = 0  # per-document encode/launch/fallback error trapped
     timed_out: int = 0  # bounded fallback ran out of budget/deadline
     breaker_open: int = 0  # fallback suspended: endpoint degraded (guard-only)
+    # per-link-group attribution (DESIGN.md §14): the same launch-path
+    # counters above, keyed by the group whose launch produced them, so
+    # a group-routed fallback is not misattributed to "the" linked tape
+    per_group: Dict[str, Dict[str, int]] = field(default_factory=dict)
+
+    _GROUP_KEYS = (
+        "batch_validated",
+        "undecided",
+        "oversize",
+        "unroll_overflow",
+        "error_isolated",
+    )
+
+    def group(self, label: str) -> Dict[str, int]:
+        g = self.per_group.get(label)
+        if g is None:
+            g = self.per_group[label] = {k: 0 for k in self._GROUP_KEYS}
+        return g
+
+
+@dataclass(frozen=True)
+class LinkGroup:
+    """One Â/M̂/horizon-compatible partition of the batchable members.
+
+    Each group owns its own :class:`LinkedTape` and jitted
+    :class:`BatchValidator`; the member-max window inflation (§8) is
+    confined to members sharing the group's signature class instead of
+    taxing the whole estate.
+    """
+
+    label: str  # e.g. "a4.m4.h4" -- stable, metrics-safe
+    key: Tuple[int, int, int]  # pow2 classes of (Â, M̂, horizon)
+    members: Tuple[str, ...]  # endpoints, registration order
+    signature: Tuple[Tuple[str, int], ...]  # (endpoint, version) identity
+    tape: LinkedTape
+    validator: BatchValidator
+    member_index: Dict[str, int]  # endpoint -> group-local schema id
 
 
 @dataclass
@@ -141,6 +186,7 @@ class SchemaRegistry:
         fallback_deadline_s: Optional[float] = 0.25,
         clock: Callable[[], float] = time.monotonic,
         metrics: Optional[MetricRegistry] = None,
+        link_grouping: bool = True,
     ):
         self.engine = engine
         self.use_pallas = use_pallas
@@ -190,6 +236,20 @@ class SchemaRegistry:
         self._linked: Optional[LinkedTape] = None
         self._linked_validator: Optional[BatchValidator] = None
         self._member_index: Dict[str, int] = {}
+        # link groups (DESIGN.md §14): the serving partition.  Eagerly
+        # re-cut at registration/eviction (the serving path never links);
+        # cached per (endpoint, version) membership tuple so no-op
+        # generation bumps keep every group's jitted validator alive.
+        # ``link_grouping=False`` pins the legacy single-group layout
+        # (one global tape) -- the differential-identity reference.
+        self.link_grouping = link_grouping
+        self._groups: List[LinkGroup] = []
+        self._group_cache: Dict[Tuple[Tuple[str, int], ...], LinkGroup] = {}
+        self._member_group: Dict[str, int] = {}
+        self._groups_generation = -1
+        # cumulative per-group launch-fallback causes (mirrors the
+        # registry_group_fallbacks_total counter family)
+        self._group_fallbacks: Dict[str, Dict[str, int]] = {}
 
     # -- registration ---------------------------------------------------------
 
@@ -288,7 +348,7 @@ class SchemaRegistry:
             self._segments[(endpoint, version)] = segment
         self._swap_failures.pop(endpoint, None)
         self._generation += 1
-        self._relink()  # eager: keep re-link cost off the serving path
+        self._relink_groups()  # eager: keep re-link cost off the serving path
         self._m_register_seconds.inc(time.perf_counter() - t_reg)
         self.metrics.counter(
             "registry_swap_total", "registration swaps by result", result="ok"
@@ -407,7 +467,7 @@ class SchemaRegistry:
             del self._active[endpoint]
             self._order.remove(endpoint)
         self._generation += 1
-        self._relink()  # eager, and a no-op unless membership changed
+        self._relink_groups()  # eager, and a no-op unless membership changed
 
     def endpoints(self) -> List[str]:
         return list(self._order)
@@ -427,6 +487,12 @@ class SchemaRegistry:
         LOOP_KEYS not batchable"``), previously recorded in
         :class:`SchemaStats` but dropped on the serving/stats path --
         ``ServeEngine`` and ``AdmissionController`` surface it.
+
+        Compile-time reasons are endpoint-scoped by construction.
+        *Runtime* launch fallbacks (oversize / unroll_overflow /
+        undecided) are attributed to the link group whose launch
+        produced them -- see :meth:`group_fallbacks` and
+        ``AdmitCounts.per_group`` -- not to a single global tape.
         """
         return {
             endpoint: self.get(endpoint).stats.fallback_reason
@@ -438,10 +504,176 @@ class SchemaRegistry:
     def generation(self) -> int:
         return self._generation
 
-    # -- linked-tape state ----------------------------------------------------
+    # -- link groups (DESIGN.md §14) ------------------------------------------
+
+    def _ensure_groups(self) -> None:
+        if self._groups_generation != self._generation:
+            self._relink_groups()
+
+    def _relink_groups(self) -> None:
+        """Partition batchable serving members into link groups and
+        (re)cut one linked tape per group.
+
+        The partition keys on :func:`~repro.registry.linker
+        .group_signature` -- power-of-two classes of (Â, M̂, horizon) --
+        an equivalence relation, so the result is deterministic and
+        independent of registration order.  Group state is cached by the
+        group's (endpoint, serving-version) tuple: membership-preserving
+        generation bumps keep every untouched group's jitted validator
+        alive, and a hot-swap re-links only the swapped member's group.
+        """
+        grouped: Dict[Tuple, List[str]] = {}
+        for endpoint in self._order:
+            entry = self.get(endpoint)
+            if entry.tape is None:
+                continue
+            key = (endpoint, entry.version)
+            if key not in self._segments:
+                self._segments[key] = segment_tape(entry.tape)
+            gk = group_signature(entry.tape) if self.link_grouping else ("all",)
+            grouped.setdefault(gk, []).append(endpoint)
+        new_groups: List[LinkGroup] = []
+        new_cache: Dict[Tuple[Tuple[str, int], ...], LinkGroup] = {}
+        for gk, members in grouped.items():
+            label = signature_label(gk) if self.link_grouping else "all"
+            signature = tuple((m, self._active[m]) for m in members)
+            g = self._group_cache.get(signature)
+            if g is None:
+                t0 = time.perf_counter()
+                with _span(
+                    "registry.relink", members=len(members), group=label
+                ):
+                    tape = link_tapes(
+                        segments=[
+                            self._segments[(m, self._active[m])]
+                            for m in members
+                        ],
+                        names=members,
+                    )
+                    validator = BatchValidator(
+                        tape,
+                        max_depth=self.max_depth,
+                        use_pallas=self.use_pallas,
+                        layout=self.layout,
+                        metrics=self.metrics,
+                    )
+                g = LinkGroup(
+                    label=label,
+                    key=gk,
+                    members=tuple(members),
+                    signature=signature,
+                    tape=tape,
+                    validator=validator,
+                    member_index={m: i for i, m in enumerate(members)},
+                )
+                self._m_relinks.inc()
+                self._m_relink_seconds.inc(time.perf_counter() - t0)
+            new_cache[signature] = g
+            new_groups.append(g)
+        self._groups = new_groups
+        self._group_cache = new_cache
+        self._member_group = {
+            m: gi for gi, g in enumerate(new_groups) for m in g.members
+        }
+        self._groups_generation = self._generation
+        for g in new_groups:
+            self.metrics.gauge(
+                "registry_group_members",
+                "batchable members per link group",
+                group=g.label,
+            ).set(len(g.members))
+
+    def groups(self) -> List[LinkGroup]:
+        """The current link-group partition (registration order)."""
+        self._ensure_groups()
+        return list(self._groups)
+
+    def group_of(self, endpoint: str) -> Optional[LinkGroup]:
+        """The link group serving ``endpoint`` (None = sequential-only)."""
+        self._ensure_groups()
+        gi = self._member_group.get(endpoint)
+        return None if gi is None else self._groups[gi]
+
+    def group_stats(self) -> Dict[str, Dict[str, Any]]:
+        """Per-group window facts: the §8 inflation ledger.
+
+        ``a_hat``/``m_hat``/``horizon`` are the *group-local* linked
+        maxima -- what every member in the group actually pays per
+        launch -- next to the pow2 ``signature_class`` ceilings the
+        partition keyed on.
+        """
+        self._ensure_groups()
+        out: Dict[str, Dict[str, Any]] = {}
+        for g in self._groups:
+            out[g.label] = {
+                "members": list(g.members),
+                "n_members": len(g.members),
+                "a_hat": int(g.tape.max_rows_per_loc),
+                "m_hat": int(g.tape.max_member_props),
+                "k": int(g.tape.max_hash_run),
+                "horizon": int(g.tape.max_loc_depth) + 1,
+                "signature_class": (
+                    {"a_hat": g.key[0], "m_hat": g.key[1], "horizon": g.key[2]}
+                    if self.link_grouping
+                    else {}
+                ),
+                "fallbacks": dict(self._group_fallbacks.get(g.label, {})),
+            }
+        return out
+
+    def warm_groups(
+        self, batches: Sequence[int], *, max_nodes: int = 256
+    ) -> int:
+        """Pre-trace every link group's launch at the given batch sizes
+        (power-of-two bucketed, matching admission padding); returns the
+        number of new jit traces.  Streaming schedulers call this at
+        attach time so deadline-bounded drains never pay a trace."""
+        from ..data.doc_table import encode_batch
+
+        self._ensure_groups()
+        traced = 0
+        for g in self._groups:
+            for b in batches:
+                bucket = 1 << (int(b) - 1).bit_length() if b > 1 else 1
+                keys = [("__warm__", j) for j in range(bucket)]
+                table = encode_batch(
+                    [None] * bucket,
+                    max_nodes=max_nodes,
+                    isolate=True,
+                    keys=keys,
+                )
+                traced += int(
+                    g.validator.warm(table, np.zeros(bucket, np.int32))
+                )
+        return traced
+
+    def group_fallbacks(self) -> Dict[str, Dict[str, int]]:
+        """group label -> cumulative launch-fallback causes
+        (oversize / unroll_overflow / undecided / error_isolated),
+        attributed to the group whose launch produced them."""
+        return {k: dict(v) for k, v in self._group_fallbacks.items()}
+
+    def _count_group_fallback(self, label: str, reason: str) -> None:
+        per = self._group_fallbacks.setdefault(label, {})
+        per[reason] = per.get(reason, 0) + 1
+        self.metrics.counter(
+            "registry_group_fallbacks_total",
+            "linked-launch fallback causes per link group",
+            group=label,
+            reason=reason,
+        ).inc()
+
+    # -- linked-tape state (global, legacy single-tape view) ------------------
 
     def _relink(self) -> None:
-        """Re-cut the linked tape from cached per-version segments."""
+        """Re-cut the *global* linked tape from cached per-version segments.
+
+        The serving path launches per link group; this all-members tape
+        is kept for the mixed-batch compatibility API
+        (:meth:`validate_mixed` / :meth:`schema_ids` /
+        :meth:`batch_validator`) and is (re)built lazily on access --
+        callers that never touch it never pay for it.
+        """
         members: List[str] = []
         segments: List[TapeSegment] = []
         for endpoint in self._order:
@@ -593,89 +825,27 @@ class SchemaRegistry:
                         ValidationOutcome.REJECTED_GUARD, False, why
                     )
                     counts.rejected_guard += 1
-        ids = self.schema_ids(endpoints)
-        fast = [
-            i for i in range(len(docs)) if ids[i] >= 0 and verdicts[i] is None
-        ]
-        if fast:
-            from ..data.doc_table import encode_batch
-
-            # pad the batch dimension to a power-of-two bucket: the
-            # executor re-traces per batch shape, and len(fast) is
-            # traffic-controlled -- bucketing caps compilations at
-            # log2(max burst) instead of one per distinct size
-            bucket = 1 << (len(fast) - 1).bit_length() if len(fast) > 1 else 1
-            pad = bucket - len(fast)
-            fast_keys = [row_keys[i] for i in fast] + [
-                ("__pad__", j) for j in range(pad)
-            ]
-            with _phase("admit.encode"), _span("registry.encode", batch=bucket):
-                table = encode_batch(
-                    [docs[i] for i in fast] + [None] * pad,
-                    max_nodes=max_nodes,
-                    isolate=True,
-                    keys=fast_keys,
-                )
-            pad_ids = np.concatenate([ids[fast], np.zeros(pad, np.int32)])
-            bv = self.batch_validator()
-            # admit.launch's exclusive time is the bisect/bookkeeping
-            # overhead around the executor.compile/execute children
-            with _phase("admit.launch"):
-                valid, decided, frontier, errors = bv.validate_isolated(
-                    table, pad_ids.astype(np.int32), keys=fast_keys
-                )
-            sites: List[Optional[FailureSite]] = []
-            if explain and any(
-                decided[j] and not valid[j] and j not in errors
-                for j in range(len(fast))
-            ):
-                # opt-in second launch over the same encoded table: the
-                # argmax over per-row failures (core/explain.py); rows we
-                # don't attribute below are simply ignored
-                try:
-                    with _phase("admit.explain"):
-                        sites = bv.explain_batch(
-                            table,
-                            pad_ids.astype(np.int32),
-                            docs=[docs[i] for i in fast] + [None] * pad,
-                        )
-                except Exception:
-                    sites = []  # attribution is best-effort diagnostics
-            with _phase("admit.verdicts"):
-                for j, i in enumerate(fast):
-                    if j in errors:
-                        verdicts[i] = Verdict(
-                            ValidationOutcome.ERROR_ISOLATED,
-                            False,
-                            errors[j],
-                            "batched",
-                        )
-                        counts.error_isolated += 1
-                    elif decided[j]:
-                        ok = bool(valid[j])
-                        site = None if ok or j >= len(sites) else sites[j]
-                        verdicts[i] = Verdict(
-                            ValidationOutcome.ADMITTED
-                            if ok
-                            else ValidationOutcome.INVALID,
-                            ok,
-                            ""
-                            if ok
-                            else (
-                                site.render()
-                                if site is not None
-                                else "schema validation failed"
-                            ),
-                            "batched",
-                            site,
-                        )
-                        counts.batch_validated += 1
-                    elif not table.ok[j]:
-                        counts.oversize += 1  # encoder node/depth budget
-                    elif frontier[j]:
-                        counts.unroll_overflow += 1  # $ref-unroll budget
-                    else:
-                        counts.undecided += 1  # executor depth budget
+        self._ensure_groups()
+        # one launch per link group with members aboard (DESIGN.md §14):
+        # each group pays its own group-local Â/M̂/horizon windows
+        by_group: Dict[int, List[int]] = {}
+        for i in range(len(docs)):
+            if verdicts[i] is None:
+                gi = self._member_group.get(endpoints[i])
+                if gi is not None:
+                    by_group.setdefault(gi, []).append(i)
+        for gi in sorted(by_group):
+            self._admit_group(
+                self._groups[gi],
+                by_group[gi],
+                docs,
+                endpoints,
+                row_keys,
+                verdicts,
+                counts,
+                max_nodes=max_nodes,
+                explain=explain,
+            )
         with _phase("admit.verdicts"):
             for i in range(len(docs)):
                 if verdicts[i] is None:
@@ -695,6 +865,119 @@ class SchemaRegistry:
                     else:
                         counts.error_isolated += 1
         return verdicts, counts  # type: ignore[return-value]
+
+    def _admit_group(
+        self,
+        g: LinkGroup,
+        rows: List[int],
+        docs: Sequence[Any],
+        endpoints: Sequence[str],
+        row_keys: List[Any],
+        verdicts: List[Optional[Verdict]],
+        counts: "AdmitCounts",
+        *,
+        max_nodes: int,
+        explain: bool,
+    ) -> None:
+        """One isolated launch of ``rows`` over ``g``'s linked tape.
+
+        Verdict semantics are identical to the legacy single-tape fast
+        path (differentially pinned bit-identical by the tests); the only
+        change is *which* linked tape the rows ride, plus per-group
+        attribution of launch-fallback causes.
+        """
+        from ..data.doc_table import encode_batch
+
+        per = counts.group(g.label)
+        # pad the batch dimension to a power-of-two bucket: the
+        # executor re-traces per batch shape, and len(rows) is
+        # traffic-controlled -- bucketing caps compilations at
+        # log2(max burst) instead of one per distinct size
+        bucket = 1 << (len(rows) - 1).bit_length() if len(rows) > 1 else 1
+        pad = bucket - len(rows)
+        fast_keys = [row_keys[i] for i in rows] + [
+            ("__pad__", j) for j in range(pad)
+        ]
+        with _phase("admit.encode"), _span(
+            "registry.encode", batch=bucket, group=g.label
+        ):
+            table = encode_batch(
+                [docs[i] for i in rows] + [None] * pad,
+                max_nodes=max_nodes,
+                isolate=True,
+                keys=fast_keys,
+            )
+        ids = np.array(
+            [g.member_index[endpoints[i]] for i in rows] + [0] * pad,
+            np.int32,
+        )
+        # admit.launch's exclusive time is the bisect/bookkeeping
+        # overhead around the executor.compile/execute children
+        with _phase("admit.launch"):
+            valid, decided, frontier, errors = g.validator.validate_isolated(
+                table, ids, keys=fast_keys
+            )
+        sites: List[Optional[FailureSite]] = []
+        if explain and any(
+            decided[j] and not valid[j] and j not in errors
+            for j in range(len(rows))
+        ):
+            # opt-in second launch over the same encoded table: the
+            # argmax over per-row failures (core/explain.py); rows we
+            # don't attribute below are simply ignored
+            try:
+                with _phase("admit.explain"):
+                    sites = g.validator.explain_batch(
+                        table,
+                        ids,
+                        docs=[docs[i] for i in rows] + [None] * pad,
+                    )
+            except Exception:
+                sites = []  # attribution is best-effort diagnostics
+        with _phase("admit.verdicts"):
+            for j, i in enumerate(rows):
+                if j in errors:
+                    verdicts[i] = Verdict(
+                        ValidationOutcome.ERROR_ISOLATED,
+                        False,
+                        errors[j],
+                        "batched",
+                    )
+                    counts.error_isolated += 1
+                    per["error_isolated"] += 1
+                    self._count_group_fallback(g.label, "error_isolated")
+                elif decided[j]:
+                    ok = bool(valid[j])
+                    site = None if ok or j >= len(sites) else sites[j]
+                    verdicts[i] = Verdict(
+                        ValidationOutcome.ADMITTED
+                        if ok
+                        else ValidationOutcome.INVALID,
+                        ok,
+                        ""
+                        if ok
+                        else (
+                            site.render()
+                            if site is not None
+                            else "schema validation failed"
+                        ),
+                        "batched",
+                        site,
+                    )
+                    counts.batch_validated += 1
+                    per["batch_validated"] += 1
+                elif not table.ok[j]:
+                    counts.oversize += 1  # encoder node/depth budget
+                    per["oversize"] += 1
+                    self._count_group_fallback(g.label, "oversize")
+                elif frontier[j]:
+                    counts.unroll_overflow += 1  # $ref-unroll budget
+                    per["unroll_overflow"] += 1
+                    self._count_group_fallback(g.label, "unroll_overflow")
+                else:
+                    counts.undecided += 1  # executor depth budget
+                    per["undecided"] += 1
+                    self._count_group_fallback(g.label, "undecided")
 
     # -- bounded sequential fallback (the second degradation rung) -----------
 

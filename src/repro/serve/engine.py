@@ -12,9 +12,15 @@ Multi-tenant routing: the engine owns a
 :class:`~repro.registry.SchemaRegistry` of per-endpoint request schemas
 (endpoint ``"default"`` always exists).  ``submit`` validates one
 request sequentially; ``submit_batch`` admits a mixed-endpoint burst in
-a single batched launch over the registry's linked tape, falling back
-to each endpoint's sequential validator only for undecided rows and
-endpoints outside the structural subset.
+one batched launch per link group (DESIGN.md §14), falling back to each
+endpoint's sequential validator only for undecided rows and endpoints
+outside the structural subset.
+
+Streaming traffic goes through :meth:`ServeEngine.scheduler`
+(``serve/scheduler.py``): a latency-budget micro-batcher that queues
+individual requests per link group and drains them through the same
+admission path, routing each drain batched-vs-sequential by a measured
+cost model.
 """
 
 from __future__ import annotations
@@ -306,6 +312,22 @@ class ServeEngine:
             per["n_circuits"] = entry.stats.n_circuits
             per["unroll_depth"] = entry.stats.unroll_depth
             per["n_frontier"] = entry.stats.n_frontier
+            # link-group placement (DESIGN.md §14): the group-local
+            # linked windows are what this endpoint actually pays per
+            # launch -- compare with the solo a_hat/horizon above to
+            # read the residual member-max inflation
+            group = self.registry.group_of(endpoint)
+            per["link_group"] = "" if group is None else group.label
+            per["group_members"] = 0 if group is None else len(group.members)
+            per["group_a_hat"] = (
+                0 if group is None else int(group.tape.max_rows_per_loc)
+            )
+            per["group_m_hat"] = (
+                0 if group is None else int(group.tape.max_member_props)
+            )
+            per["group_horizon"] = (
+                0 if group is None else int(group.tape.max_loc_depth) + 1
+            )
             per["last_swap_error"] = swap_failures.get(endpoint, "")
             breaker = self.registry.breaker(endpoint)
             per["breaker_state"] = breaker.state
@@ -450,12 +472,20 @@ class ServeEngine:
         if stages is not None:
             stages["validate_s"] = dt
         self.stats.validation_seconds += dt
-        self.stats.record_outcome(verdict.outcome)
         if verdict.outcome in (
             ValidationOutcome.ADMITTED,
             ValidationOutcome.INVALID,
         ):
             self.stats.fallback_validated += 1  # the sequential oracle ran
+        return self._finish(endpoint, request, verdict)
+
+    def _finish(self, endpoint: str, request: Any, verdict) -> SubmitResult:
+        """One verdict -> one terminal :class:`SubmitResult`: outcome
+        accounting, enqueue on admit, canonical error string on reject.
+        Shared by ``submit``, ``submit_batch``, and the streaming
+        scheduler so all three produce identical results for identical
+        verdicts."""
+        self.stats.record_outcome(verdict.outcome)
         if verdict.admitted:
             return SubmitResult(
                 self._enqueue(request, endpoint), "", verdict.outcome
@@ -478,8 +508,8 @@ class ServeEngine:
     ) -> List[SubmitResult]:
         """Admit a mixed-endpoint burst of (endpoint, request_json) pairs.
 
-        All parseable requests are validated in ONE batched launch over
-        the registry's linked tape; only undecided rows and endpoints
+        All parseable requests are validated in one batched launch per
+        link group (DESIGN.md §14); only undecided rows and endpoints
         outside the structural subset take the (bounded) sequential
         fallback.  Per-document faults are isolated: a poison row gets an
         ERROR_ISOLATED result while every other row's verdict is
@@ -491,15 +521,18 @@ class ServeEngine:
         INVALID results carry the attributed site in their error string.
         Latency accounting: exactly one ``serve_request_seconds``
         observation per received request -- the burst's validation wall
-        time amortized evenly over its validated rows, and 0.0 for rows
-        rejected before validation (parse/guard).
+        time amortized evenly over its validated rows, and the *true*
+        admission->verdict wall (batch entry to the parse/guard reject)
+        for rows rejected before validation, so SLO burn rates never
+        under-count rejected traffic.
         """
         batch_id = self._batch_seq
         self._batch_seq += 1
+        t_batch = time.perf_counter()
         with _span("serve.submit_batch", batch=len(requests)):
             out: List[Optional[SubmitResult]] = [None] * len(requests)
             parsed: List[Tuple[int, str, Any, int]] = []
-            guard_rejected: List[Tuple[int, str, int]] = []
+            guard_rejected: List[Tuple[int, str, float]] = []
             with _phase("serve.parse"):
                 for i, (endpoint, request_json) in enumerate(requests):
                     self.stats.received += 1
@@ -515,7 +548,7 @@ class ServeEngine:
                                 endpoint
                                 if endpoint in self.registry
                                 else "__unknown__",
-                                serial,
+                                time.perf_counter() - t_batch,
                             )
                         )
                     else:
@@ -555,25 +588,7 @@ class ServeEngine:
                     for (i, endpoint, request, serial), verdict in zip(
                         parsed, verdicts
                     ):
-                        self.stats.record_outcome(verdict.outcome)
-                        if verdict.admitted:
-                            out[i] = SubmitResult(
-                                self._enqueue(request, endpoint),
-                                "",
-                                verdict.outcome,
-                            )
-                        else:
-                            self.stats.rejected += 1
-                            self.stats.count(endpoint, "rejected")
-                            if verdict.outcome is ValidationOutcome.INVALID:
-                                err = (
-                                    verdict.reason
-                                    if verdict.site is not None
-                                    else "schema validation failed"
-                                )
-                            else:
-                                err = f"{verdict.outcome.value}: {verdict.reason}"
-                            out[i] = SubmitResult(None, err, verdict.outcome)
+                        out[i] = self._finish(endpoint, request, verdict)
                         if ev is not None and ev.want():
                             ev.emit(
                                 kind="batch",
@@ -588,8 +603,10 @@ class ServeEngine:
                                 },
                             )
             ev = self.events
-            for i, label, serial in guard_rejected:
-                self._latency(label).observe(0.0)
+            for i, label, lat in guard_rejected:
+                # true wall from batch entry to the parse/guard verdict
+                # (was a flat 0.0 observation before §14)
+                self._latency(label).observe(lat)
                 if ev is not None and ev.want():
                     ev.emit(
                         kind="batch",
@@ -597,7 +614,7 @@ class ServeEngine:
                         endpoint=label,
                         request_id=None,
                         outcome=ValidationOutcome.REJECTED_GUARD.value,
-                        latency_s=0.0,
+                        latency_s=lat,
                         stages={},
                     )
             return out  # type: ignore[return-value]
@@ -718,6 +735,23 @@ class ServeEngine:
             self.step()
             steps += 1
         return dict(self.results)
+
+    # -- streaming runtime (serve/scheduler.py, DESIGN.md §14) ----------------
+
+    def scheduler(self, scheduler_cfg=None, **kw) -> "StreamScheduler":
+        """A streaming micro-batcher over this engine.
+
+        Requests :meth:`~repro.serve.scheduler.StreamScheduler.offer`-ed
+        to the scheduler queue per link group and drain through the same
+        admission/verdict path as :meth:`submit_batch` (identical
+        :class:`SubmitResult` per request), with queue delay included in
+        ``serve_request_seconds``.  Keyword arguments build a
+        :class:`~repro.serve.scheduler.SchedulerConfig`.
+        """
+        from .scheduler import SchedulerConfig, StreamScheduler
+
+        cfg = scheduler_cfg if scheduler_cfg is not None else SchedulerConfig(**kw)
+        return StreamScheduler(self, cfg)
 
 
 def _extract_prompt(request: Any) -> Optional[str]:

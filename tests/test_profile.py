@@ -289,7 +289,9 @@ class TestEngineIntegration:
         assert len({r["batch_id"] for r in batch}) == 1
         assert all(r["stages"]["batch_rows"] == 4 for r in batch)
         guard = [r for r in records if r["outcome"] == "rejected_guard"]
-        assert guard and guard[0]["latency_s"] == 0.0
+        # true wall from batch entry to the parse reject (DESIGN.md §14
+        # closed the historical 0.0-observation under-count)
+        assert guard and guard[0]["latency_s"] > 0.0
 
     def test_flush_events(self, engine, tmp_path):
         engine.events.clear()

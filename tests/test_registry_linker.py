@@ -8,12 +8,20 @@ import random
 import numpy as np
 import pytest
 
-from repro.core import Validator, compile_schema
+from repro.core import ValidationOutcome, Validator, compile_schema
 from repro.core.batch_executor import BatchValidator
 from repro.core.tape import build_tape, try_build_tape
 from repro.data.doc_table import encode_batch
 from repro.data.pipeline import AdmissionController
-from repro.registry import SchemaRegistry, link_tapes, segment_tape
+from repro.registry import (
+    SchemaRegistry,
+    group_signature,
+    link_tapes,
+    pow2_class,
+    segment_tape,
+    signature_label,
+)
+from repro.serve.faults import FaultInjector
 
 from test_batch_csr import _rand_doc, _rand_schema
 
@@ -462,3 +470,145 @@ class TestMultiTenantAdmission:
         assert ctrl.batch_validator.use_pallas is False
         oks = ctrl.admit([{"name": "x"}, {"name": ""}])
         assert oks == [True, False]
+
+
+# ---------------------------------------------------------------------------
+# Link groups (DESIGN.md §14): Â-compatible partition of the registry
+# ---------------------------------------------------------------------------
+
+
+def _grouped_registry():
+    reg = SchemaRegistry(use_pallas=False)
+    reg.register("s1", S1)
+    reg.register("s2", S2)
+    reg.register("s3", S3)
+    return reg
+
+
+def _group_docs(n, seed=0):
+    """Deterministic (docs, endpoints) mix spanning all three groups."""
+    rng = random.Random(seed)
+    pool = [
+        ("s1", {"name": "x", "age": 3}),
+        ("s1", {"name": "", "age": -1}),  # invalid
+        ("s2", {"name": "a", "kind": "x", "tags": ["t"]}),
+        ("s2", {"name": "z"}),  # invalid: enum
+        ("s3", {"x": 3.5, "nested": {"name": 5}}),
+        ("s3", {"x": 99}),  # invalid: maximum
+    ]
+    picks = [pool[rng.randrange(len(pool))] for _ in range(n)]
+    return [d for _, d in picks], [e for e, _ in picks]
+
+
+class TestLinkGroups:
+    def test_pow2_class_and_labels(self):
+        assert [pow2_class(x) for x in (1, 2, 3, 4, 5, 8, 9)] == [
+            1, 2, 4, 4, 8, 8, 16,
+        ]
+        assert signature_label((2, 8, 4)) == "a2.m8.h4"
+
+    def test_partition_keys_on_tape_signatures(self):
+        reg = _grouped_registry()
+        groups = reg.groups()
+        # S1/S2/S3 have pairwise-distinct pow2 signatures -> 3 groups
+        assert {g.members for g in groups} == {("s1",), ("s2",), ("s3",)}
+        for g in groups:
+            for m in g.members:
+                assert group_signature(reg.get(m).tape) == g.key
+                assert reg.group_of(m) is g
+                assert g.member_index[m] < len(g.members)
+            assert g.label == signature_label(g.key)
+
+    def test_partition_is_order_independent(self):
+        a = _grouped_registry()
+        b = SchemaRegistry(use_pallas=False)
+        for name, schema in (("s3", S3), ("s1", S1), ("s2", S2)):
+            b.register(name, schema)
+        assert {g.label: set(g.members) for g in a.groups()} == {
+            g.label: set(g.members) for g in b.groups()
+        }
+
+    def test_link_grouping_false_is_single_group(self):
+        reg = SchemaRegistry(use_pallas=False, link_grouping=False)
+        reg.register("s1", S1)
+        reg.register("s2", S2)
+        (g,) = reg.groups()
+        assert g.label == "all" and set(g.members) == {"s1", "s2"}
+
+    def test_group_windows_stay_member_local(self):
+        """The §8 inflation fix: a fat member in its own group no longer
+        widens a lean group's launch windows (charge-style regression)."""
+        reg = _grouped_registry()
+        stats = reg.group_stats()
+        lean = stats[signature_label(group_signature(reg.get("s1").tape))]
+        t1 = reg.get("s1").tape
+        assert lean["a_hat"] == int(t1.max_rows_per_loc)
+        assert lean["horizon"] == int(t1.max_loc_depth) + 1
+        # the flat (union) layout pays the fattest member's windows
+        flat = SchemaRegistry(use_pallas=False, link_grouping=False)
+        for name, schema in (("s1", S1), ("s2", S2), ("s3", S3)):
+            flat.register(name, schema)
+        union = flat.group_stats()["all"]
+        assert union["m_hat"] > lean["m_hat"]
+        assert union["horizon"] > lean["horizon"]
+
+    def test_grouped_vs_flat_bit_identity(self):
+        grouped = _grouped_registry()
+        flat = SchemaRegistry(use_pallas=False, link_grouping=False)
+        for name, schema in (("s1", S1), ("s2", S2), ("s3", S3)):
+            flat.register(name, schema)
+        docs, endpoints = _group_docs(96, seed=7)
+        vg, cg = grouped.admit_mixed_ex(docs, endpoints)
+        vf, cf = flat.admit_mixed_ex(docs, endpoints)
+        assert [(v.outcome, v.valid) for v in vg] == [
+            (v.outcome, v.valid) for v in vf
+        ]
+        assert cg.batch_validated == cf.batch_validated
+
+    def test_unrelated_swap_keeps_other_groups_jitted(self):
+        reg = _grouped_registry()
+        v1 = reg.group_of("s1").validator
+        reg.register("s2", S2)  # identical serving schema: no-op bump
+        assert reg.group_of("s1").validator is v1
+        assert reg.group_of("s2").validator is v1 or True  # own group free
+        # real hot-swap of s2 relinks ONLY s2's group
+        v3 = reg.group_of("s3").validator
+        reg.register("s2", {"properties": {"q": {"const": 1}}})
+        assert reg.group_of("s1").validator is v1
+        assert reg.group_of("s3").validator is v3
+
+    def test_per_group_fallback_attribution(self):
+        reg = _grouped_registry()
+        docs, endpoints = _group_docs(32, seed=3)
+        label_of = {e: reg.group_of(e).label for e in ("s1", "s2", "s3")}
+        # poison one row belonging to s1's group only (keys default to
+        # row indices in admit_mixed_ex)
+        victim = endpoints.index("s1")
+        inj = FaultInjector(seed=1).poison("launch", victim)
+        with inj:
+            verdicts, counts = reg.admit_mixed_ex(docs, endpoints)
+        assert verdicts[victim].outcome is ValidationOutcome.ERROR_ISOLATED
+        hit = label_of["s1"]
+        assert counts.per_group[hit]["error_isolated"] == 1
+        for lbl in set(label_of.values()) - {hit}:
+            assert counts.per_group.get(lbl, {}).get("error_isolated", 0) == 0
+        assert reg.group_fallbacks()[hit]["error_isolated"] == 1
+        assert reg.group_stats()[hit]["fallbacks"]["error_isolated"] == 1
+
+    def test_per_group_counts_partition_batch_validated(self):
+        reg = _grouped_registry()
+        docs, endpoints = _group_docs(48, seed=11)
+        _, counts = reg.admit_mixed_ex(docs, endpoints)
+        total = sum(
+            per["batch_validated"] for per in counts.per_group.values()
+        )
+        assert total == counts.batch_validated > 0
+
+    def test_warm_groups_pretraces_pow2_shapes(self):
+        reg = _grouped_registry()
+        traced = reg.warm_groups([1, 3], max_nodes=64)
+        assert traced == len(reg.groups()) * 2  # buckets 1 and 4, per group
+        assert reg.warm_groups([1, 3], max_nodes=64) == 0  # idempotent
+        for g in reg.groups():
+            shapes = g.validator.seen_shapes()
+            assert (1, 64) in shapes and (4, 64) in shapes

@@ -1,0 +1,396 @@
+"""Streaming scheduler coverage (DESIGN.md §14): drain-timing-independent
+verdicts under injected faults, breaker-tripped groups not starving
+healthy lanes, queue-delay-inclusive latency accounting (the §13
+under-count regression), cost-model routing, and bit-identity between
+the stream runtime and the synchronous ``submit_batch`` path."""
+
+import json
+
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core import BreakerConfig, ValidationOutcome
+from repro.serve.faults import FaultInjector
+from repro.serve.scheduler import (
+    CostModel,
+    SchedulerConfig,
+    _bucket,
+    seed_priors_from_bench,
+)
+
+FLAT = {
+    "type": "object",
+    "required": ["a"],
+    "additionalProperties": False,
+    "properties": {
+        "a": {"type": "integer", "minimum": 0},
+        "b": {"type": "string", "minLength": 1},
+    },
+}
+DEEP = {
+    "type": "object",
+    "properties": {
+        "x": {"type": "number", "maximum": 10},
+        "nested": {
+            "type": "object",
+            "properties": {
+                "name": {"const": 5},
+                "deep": {"properties": {"q": {"const": 1}, "r": {"const": 2}}},
+            },
+        },
+        "p1": {"type": "integer"},
+        "p2": {"type": "integer"},
+        "p3": {"type": "integer"},
+        "p4": {"type": "integer"},
+        "p5": {"type": "integer"},
+    },
+}
+
+
+class Clock:
+    """Deterministic injectable clock (breaker/deadline tests)."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def advance(self, dt):
+        self.t += dt
+
+    def __call__(self):
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def model_bundle():
+    from repro.configs import get_config
+    from repro.models import Model
+
+    cfg = get_config("granite-3-8b").reduced()
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(model_bundle, registry=None):
+    from repro.registry import SchemaRegistry
+    from repro.serve.engine import ServeConfig, ServeEngine
+
+    cfg, params = model_bundle
+    reg = registry if registry is not None else SchemaRegistry(use_pallas=False)
+    eng = ServeEngine(
+        cfg,
+        params,
+        ServeConfig(batch_slots=2, max_len=64, default_max_tokens=4),
+        registry=reg,
+    )
+    eng.register_endpoint("flat", FLAT)
+    eng.register_endpoint("deep", DEEP)
+    return eng
+
+
+def _stream():
+    """Fixed request mix: both groups, valid/invalid/guard-reject rows."""
+    rows = [
+        ("flat", json.dumps({"a": 1, "b": "x"})),  # valid
+        ("deep", json.dumps({"x": 3, "nested": {"name": 5}})),  # valid
+        ("flat", json.dumps({"a": -1})),  # invalid: minimum
+        ("flat", "{broken"),  # guard: parse
+        ("deep", json.dumps({"x": 99})),  # invalid: maximum
+        ("nosuch", "{}"),  # guard: unknown endpoint
+        ("deep", json.dumps({"p1": 1, "p2": 2})),  # valid
+        ("flat", json.dumps({"b": ""})),  # invalid: required
+        ("deep", json.dumps({"nested": {"name": 4}})),  # invalid: const
+        ("flat", json.dumps({"a": 7})),  # valid
+    ]
+    return rows * 3  # 30 requests, serials 1..30
+
+
+def _fingerprint(tickets):
+    return [
+        (t.endpoint, t.serial, t.result.outcome, t.result.error)
+        for t in tickets
+    ]
+
+
+def _hist_totals(engine, family="serve_request_seconds"):
+    children = engine.registry.metrics.family_children(family)
+    return (
+        sum(h.count for h in children.values()),
+        sum(h.sum for h in children.values()),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Determinism: verdicts independent of drain timing, faults included
+# ---------------------------------------------------------------------------
+
+
+class TestDrainTimingIndependence:
+    def _run(self, model_bundle, eager):
+        """Offer the fixed stream under a seeded fault plan; ``eager``
+        drains after every offer (batches of ~1), else one bulk flush
+        (full lanes).  Outcomes must not depend on the difference."""
+        eng = _engine(model_bundle)
+        sched = eng.scheduler(
+            max_delay_s=0.0 if eager else 60.0,
+            route="batched",
+            profile_every=0,
+            bench_priors=None,
+        )
+        # fault keys are per-request ("stream", serial) -- identical in
+        # both runs because serials track offer order on a fresh engine
+        inj = (
+            FaultInjector(seed=5)
+            .rate("encode", 0.15)
+            .poison("launch", ("stream", 7), ("stream", 22))
+            .rate("fallback", 0.3)
+        )
+        tickets = []
+        with inj:
+            for i, (ep, req) in enumerate(_stream()):
+                tickets.append(sched.offer(ep, req, now=float(i)))
+                if eager:
+                    sched.pump(now=float(i))
+            sched.flush(now=1e9)
+        assert inj.fired.get("launch", 0) > 0
+        assert sched.depth() == 0
+        assert all(t.done for t in tickets)
+        return eng, tickets
+
+    def test_outcomes_identical_across_drain_timings(self, model_bundle):
+        _, eager = self._run(model_bundle, eager=True)
+        _, bulk = self._run(model_bundle, eager=False)
+        assert _fingerprint(eager) == _fingerprint(bulk)
+        # the poisoned serials were isolated, not spread to batch mates
+        by_serial = {t.serial: t for t in bulk}
+        for s in (7, 22):
+            assert (
+                by_serial[s].result.outcome
+                is ValidationOutcome.ERROR_ISOLATED
+            )
+
+    def test_stats_reconcile(self, model_bundle):
+        eng, tickets = self._run(model_bundle, eager=False)
+        assert eng.stats.received == len(tickets)
+        assert eng.stats.received == sum(eng.stats.outcomes.values())
+        # one latency observation per request, guard rejects included
+        count, _ = _hist_totals(eng)
+        assert count == len(tickets)
+
+
+# ---------------------------------------------------------------------------
+# Differential: stream runtime == submit_batch, request by request
+# ---------------------------------------------------------------------------
+
+
+class TestStreamVsBatchIdentity:
+    @pytest.mark.parametrize("route", ["batched", "sequential"])
+    def test_bit_identical_results(self, model_bundle, route):
+        rows = _stream()
+        ref = _engine(model_bundle)
+        expected = ref.submit_batch(rows)
+        eng = _engine(model_bundle)
+        sched = eng.scheduler(
+            max_delay_s=60.0, route=route, profile_every=0, bench_priors=None
+        )
+        tickets = [
+            sched.offer(ep, req, now=0.0) for ep, req in rows
+        ]
+        sched.flush(now=0.0)
+        got = [t.result for t in tickets]
+        assert [(r.outcome, r.error) for r in got] == [
+            (r.outcome, r.error) for r in expected
+        ]
+
+
+# ---------------------------------------------------------------------------
+# Breaker-tripped group routes to fallback without starving other lanes
+# ---------------------------------------------------------------------------
+
+
+class TestBreakerGroupIsolation:
+    def test_open_breaker_does_not_starve_other_groups(self, model_bundle):
+        from repro.registry import SchemaRegistry
+
+        clock = Clock()
+        reg = SchemaRegistry(
+            use_pallas=False,
+            fallback_max_steps=4,
+            fallback_deadline_s=None,
+            breaker=BreakerConfig(threshold=2, cooldown_s=300.0),
+            clock=clock,
+        )
+        eng = _engine(model_bundle, registry=reg)
+        sched = eng.scheduler(
+            max_delay_s=0.0,
+            route="sequential",
+            profile_every=0,
+            bench_priors=None,
+        )
+        # two slow deep docs exhaust the 4-step fallback budget -> two
+        # consecutive timeouts trip deep's breaker
+        slow = json.dumps({"x": 3, "nested": {"name": 5}})
+        for _ in range(2):
+            t = sched.offer("deep", slow, now=clock.t)
+            sched.pump(now=clock.t)
+            assert t.result.outcome is ValidationOutcome.TIMED_OUT
+        assert reg.breaker("deep").state == "open"
+        # interleave deep (breaker open) with flat traffic; deep's lane
+        # head is OLDER, so a starvation bug would block flat behind it
+        deep_tix = [sched.offer("deep", slow, now=clock.t) for _ in range(3)]
+        flat_tix = [
+            sched.offer("flat", json.dumps(7), now=clock.t) for _ in range(3)
+        ]
+        reports = sched.flush(now=clock.t)
+        assert {r.lane for r in reports} == {
+            reg.group_of("deep").label,
+            reg.group_of("flat").label,
+        }
+        for t in deep_tix:
+            assert t.result.outcome is ValidationOutcome.UNDECIDED_FALLBACK
+            assert "circuit open" in t.result.error
+        for t in flat_tix:  # fail-fast type check fits the step budget
+            assert t.result.outcome is ValidationOutcome.INVALID
+        assert reg.breaker("flat").state == "closed"
+        assert sched.depth() == 0
+
+
+# ---------------------------------------------------------------------------
+# Latency accounting: queue delay included, guard rejects billed true wall
+# ---------------------------------------------------------------------------
+
+
+class TestLatencyAccounting:
+    def test_submit_batch_guard_rejects_observe_true_wall(self, model_bundle):
+        eng = _engine(model_bundle)
+        results = eng.submit_batch([("flat", "{broken")] * 4)
+        assert all(
+            r.outcome is ValidationOutcome.REJECTED_GUARD for r in results
+        )
+        count, total = _hist_totals(eng)
+        assert count == 4
+        assert total > 0.0  # regression: guard rejects observed 0.0
+
+    def test_scheduler_latency_includes_queue_delay(self, model_bundle):
+        eng = _engine(model_bundle)
+        sched = eng.scheduler(
+            max_delay_s=60.0, profile_every=0, bench_priors=None
+        )
+        tickets = [
+            sched.offer("flat", json.dumps({"a": i}), now=0.0)
+            for i in range(4)
+        ]
+        sched.flush(now=5.0)  # drained 5 virtual seconds after arrival
+        for t in tickets:
+            assert t.queue_delay_s == pytest.approx(5.0)
+            assert t.latency_s >= 5.0  # queue delay + real drain wall
+        count, total = _hist_totals(eng)
+        assert count == 4 and total >= 20.0
+        qcount, qtotal = _hist_totals(eng, "serve_queue_delay_seconds")
+        assert qcount == 4 and qtotal == pytest.approx(20.0)
+
+    def test_offer_guard_reject_is_terminal_and_billed(self, model_bundle):
+        eng = _engine(model_bundle)
+        sched = eng.scheduler(profile_every=0, bench_priors=None)
+        t = sched.offer("flat", "{broken", now=0.0)
+        assert t.done and t.result.outcome is ValidationOutcome.REJECTED_GUARD
+        assert t.latency_s > 0.0
+        assert sched.depth() == 0
+        assert sched.stats.rejected_at_offer == 1
+        count, total = _hist_totals(eng)
+        assert count == 1 and total > 0.0
+
+    def test_endpoint_stats_reports_link_group(self, model_bundle):
+        eng = _engine(model_bundle)
+        reg = eng.registry
+        all_stats = eng.endpoint_stats()
+        for ep in ("flat", "deep"):
+            stats = all_stats[ep]
+            g = reg.group_of(ep)
+            assert stats["link_group"] == g.label
+            assert stats["group_members"] == len(g.members)
+            assert stats["group_a_hat"] == int(g.tape.max_rows_per_loc)
+            assert stats["group_m_hat"] == int(g.tape.max_member_props)
+            assert stats["group_horizon"] == int(g.tape.max_loc_depth) + 1
+        # the two endpoints deliberately land in different groups
+        assert all_stats["flat"]["link_group"] != all_stats["deep"]["link_group"]
+
+
+# ---------------------------------------------------------------------------
+# Cost model: bucketing, EMA updates, routing flips, bench priors
+# ---------------------------------------------------------------------------
+
+
+class TestCostModel:
+    def test_bucket_is_pow2(self):
+        assert [_bucket(n) for n in (1, 2, 3, 4, 5, 8, 9, 256)] == [
+            1, 2, 4, 4, 8, 8, 16, 256,
+        ]
+
+    def test_priors_then_ema(self):
+        cfg = SchedulerConfig(
+            launch_fixed_us=1000.0,
+            launch_us_per_doc=10.0,
+            seq_us_per_doc=50.0,
+            ema_alpha=0.5,
+            bench_priors=None,
+        )
+        cm = CostModel(cfg)
+        # priors: batched pays the padded bucket, sequential pays n
+        assert cm.batched_us("g", 3) == 1000.0 + 10.0 * 4
+        assert cm.sequential_us("g", 3) == 150.0
+        assert not cm.prefer_batched("g", 3)
+        assert cm.prefer_batched("g", 100)  # 2040 < 5000
+        # a measured launch replaces the prior for that (lane, bucket)
+        cm.observe("g", "batched", 3, 80.0)
+        assert cm.batched_us("g", 3) == 80.0
+        cm.observe("g", "batched", 3, 120.0)
+        assert cm.batched_us("g", 3) == pytest.approx(100.0)  # EMA(0.5)
+        assert cm.batched_us("g", 5) == 1000.0 + 10.0 * 8  # other bucket
+        # sequential EMA is per-doc, per lane
+        cm.observe("g", "sequential", 4, 40.0)
+        assert cm.sequential_us("g", 2) == pytest.approx(20.0)
+        assert cm.sequential_us("other", 2) == 100.0  # lane-isolated
+        snap = cm.snapshot()
+        assert snap["launch_ema_us"]["g@4"] == pytest.approx(100.0)
+
+    def test_seed_priors_from_bench(self, tmp_path):
+        bench = tmp_path / "BENCH_registry.json"
+        bench.write_text(
+            json.dumps(
+                {
+                    "throughput": [
+                        {
+                            "batch": 64,
+                            "linked_us_per_doc": 40.0,
+                            "encode_us_per_doc": 60.0,
+                            "sequential_us_per_doc": 5.0,
+                        },
+                        {
+                            "batch": 512,
+                            "linked_us_per_doc": 30.0,
+                            "encode_us_per_doc": 50.0,
+                            "sequential_us_per_doc": 9.0,
+                        },
+                    ]
+                }
+            )
+        )
+        priors = seed_priors_from_bench(bench)
+        # line through (64, 6400) and (512, 40960): slope ~77.14
+        assert priors["launch_us_per_doc"] == pytest.approx(77.142857, rel=1e-4)
+        assert priors["launch_fixed_us"] == pytest.approx(1462.857, rel=1e-3)
+        assert priors["seq_us_per_doc"] == 9.0  # most conservative row
+        assert seed_priors_from_bench(tmp_path / "missing.json") is None
+
+    def test_sequential_only_endpoints_get_own_lane(self, model_bundle):
+        eng = _engine(model_bundle)
+        eng.register_endpoint("slow", {"uniqueItems": True})
+        sched = eng.scheduler(
+            max_delay_s=60.0, profile_every=0, bench_priors=None
+        )
+        t = sched.offer("slow", json.dumps([1, 2]), now=0.0)
+        assert "seq:slow" in sched.snapshot()["lanes"]
+        (report,) = sched.flush(now=0.0)
+        assert report.route == "sequential"
+        assert t.result.outcome is ValidationOutcome.ADMITTED
