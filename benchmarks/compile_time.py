@@ -1,16 +1,123 @@
-"""Figure 5 analogue: schema compilation time vs schema size."""
+"""Figure 5 analogue: schema compilation time vs schema size, plus the
+register()-time schema-algebra cost/benefit ledger (DESIGN.md §15).
+
+Two sections:
+
+- ``compile_time`` -- raw ``compile_schema`` wall time over the scaled
+  corpus (the paper's compile-cost amortization argument).
+- ``analysis`` -- the ahead-of-time pipeline over the gateway presets
+  plus directed prune-heavy schemas: analysis wall time per schema and
+  the pre- vs post-normalization tape shape (Â, M̂, horizon, circuit
+  count, location count), i.e. what branch pruning buys the batched
+  executor before a single document is validated.
+
+Emits ``results/BENCH_compile.json``; the ``*_us_per_schema`` leaves
+are regression-gated by ``scripts/bench_gate.py``.
+"""
 
 from __future__ import annotations
 
+import json
 import os
 import time
-from typing import Dict, List
+from pathlib import Path
+from typing import Any, Dict, List, Optional
 
+from repro.analysis import analyze_schema
 from repro.core import compile_schema
+from repro.core.tape import try_build_tape
 from repro.data.corpus import make_corpus
+from repro.registry.presets import GATEWAY_SCHEMAS
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
 
 SCALE = float(os.environ.get("BENCH_CORPUS_SCALE", "0.1"))
 REPS = 3
+
+# Directed prune-heavy schemas: shapes where the analyzer provably
+# removes work before lowering (dead tagged-union branches, duplicated
+# allOf constraints, unsatisfiable disjuncts).
+PRUNE_SCHEMAS: Dict[str, Any] = {
+    "dead_branches": {
+        "type": "object",
+        "required": ["kind"],
+        "properties": {"kind": {"enum": ["a", "b"]}},
+        "anyOf": [
+            {"properties": {"kind": {"const": "a"}}, "required": ["kind"]},
+            {"properties": {"kind": {"const": "b"}}, "required": ["kind"]},
+            {"type": "string", "minLength": 8, "maxLength": 2},
+            {"type": "integer", "minimum": 10, "maximum": 3},
+            {"type": "number", "exclusiveMinimum": 5, "maximum": 5},
+        ],
+    },
+    "dup_allof": {
+        "allOf": [
+            {"type": "object", "required": ["id"], "properties": {"id": {"type": "integer", "minimum": 0}}},
+            {"type": "object", "required": ["id"], "properties": {"id": {"minimum": 0}}},
+            {"required": ["id"]},
+            {"minProperties": 0},
+        ],
+    },
+    "contradictory_oneof": {
+        "type": "object",
+        "properties": {
+            "mode": {"type": "string", "enum": ["x", "y", "z"]},
+            "n": {"type": "integer", "minimum": 0, "maximum": 100},
+        },
+        "oneOf": [
+            {"properties": {"mode": {"const": "x"}, "n": {"maximum": 10}}},
+            {"properties": {"mode": {"const": "w", "enum": ["x", "y", "z"]}}},
+            {"properties": {"n": {"type": "integer", "minimum": 50, "maximum": 20}}},
+        ],
+    },
+}
+
+
+def _tape_shape(schema: Any) -> Optional[Dict[str, int]]:
+    compiled = compile_schema(schema)
+    tape, _ = try_build_tape(compiled)
+    if tape is None:
+        return None
+    return {
+        "n_locations": int(tape.n_locations),
+        "a_hat": int(tape.max_rows_per_loc),
+        "m_hat": int(tape.max_member_props),
+        "horizon": int(tape.max_loc_depth) + 1,
+        "n_circuits": int(tape.n_circuits),
+        "n_assertions": int(tape.n_assertions),
+    }
+
+
+def _analysis_rows() -> List[Dict[str, Any]]:
+    rows: List[Dict[str, Any]] = []
+    targets = {**GATEWAY_SCHEMAS, **PRUNE_SCHEMAS}
+    for name, schema in targets.items():
+        best = float("inf")
+        report = None
+        for _ in range(REPS):
+            t0 = time.perf_counter()
+            report = analyze_schema(schema)
+            best = min(best, time.perf_counter() - t0)
+        pre = _tape_shape(schema)
+        post = _tape_shape(report.normalized)
+        row: Dict[str, Any] = {
+            "name": name,
+            "analysis_us": best * 1e6,
+            "normalized": report.changed,
+            "pruned_branches": report.pruned_branches,
+            "folded_assertions": report.folded_assertions
+            + report.tightened_bounds
+            + report.removed_noops,
+            "verified": report.verified,
+        }
+        if pre is not None:
+            row["pre"] = pre
+        if post is not None:
+            row["post"] = post
+        if pre is not None and post is not None:
+            row["delta"] = {k: post[k] - pre[k] for k in pre}
+        rows.append(row)
+    return rows
 
 
 def run(report: Dict[str, object]) -> List[str]:
@@ -38,4 +145,34 @@ def run(report: Dict[str, object]) -> List[str]:
             f"kb={r['schema_kb']:.1f};instructions={r['instructions']}"
         )
     report["compile_time"] = rows
+
+    # -- schema-algebra ledger (DESIGN.md §15) ----------------------------
+    analysis_rows = _analysis_rows()
+    n = max(1, len(analysis_rows))
+    analysis_us = sum(r["analysis_us"] for r in analysis_rows) / n
+    pruned = sum(r["pruned_branches"] for r in analysis_rows)
+    folded = sum(r["folded_assertions"] for r in analysis_rows)
+    loc_delta = sum(r.get("delta", {}).get("n_locations", 0) for r in analysis_rows)
+    payload = {
+        "analysis": {
+            "analysis_us_per_schema": analysis_us,
+            "pruned_branches": pruned,
+            "folded_assertions": folded,
+            "n_locations_delta": loc_delta,
+            "schemas": analysis_rows,
+        },
+        "compile_time": rows,
+    }
+    report["analysis"] = payload["analysis"]
+    for r in analysis_rows:
+        d = r.get("delta", {})
+        lines.append(
+            f"compile/analyze_{r['name']},{r['analysis_us']:.1f},"
+            f"pruned={r['pruned_branches']};folded={r['folded_assertions']};"
+            f"dloc={d.get('n_locations', 0)};da_hat={d.get('a_hat', 0)};"
+            f"dhorizon={d.get('horizon', 0)};dcirc={d.get('n_circuits', 0)}"
+        )
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "BENCH_compile.json").write_text(json.dumps(payload, indent=2))
+    lines.append("compile/bench_json,0,results/BENCH_compile.json")
     return lines

@@ -47,7 +47,7 @@ from typing import Any, Dict, Iterator, List, Optional, Tuple
 REPO = Path(__file__).resolve().parents[1]
 RESULTS = REPO / "results"
 
-GATED_SUFFIXES = ("us_per_doc", "p99_ms")
+GATED_SUFFIXES = ("us_per_doc", "p99_ms", "us_per_schema")
 ALLOWLIST = {"traced_us_per_doc", "total_us_per_doc"}
 
 

@@ -122,6 +122,27 @@ def collect(results_dir: Path = RESULTS) -> Dict[str, Any]:
             ]
             entry["stream_vs_batch"] = bench.get("stream_vs_batch", [])
             entry["endpoint_slo"] = bench.get("endpoint_slo", {})
+        if name == "compile" and "analysis" in bench:
+            a = bench["analysis"]
+            entry["analysis"] = {
+                "analysis_us_per_schema": a.get("analysis_us_per_schema"),
+                "pruned_branches": a.get("pruned_branches"),
+                "folded_assertions": a.get("folded_assertions"),
+                "schemas": [
+                    {
+                        k: row[k]
+                        for k in (
+                            "name",
+                            "analysis_us",
+                            "pruned_branches",
+                            "folded_assertions",
+                            "delta",
+                        )
+                        if k in row
+                    }
+                    for row in a.get("schemas", [])
+                ],
+            }
         if name == "observability" and "profile" in bench:
             prof = bench["profile"]
             entry["attribution"] = {
@@ -146,10 +167,12 @@ def collect(results_dir: Path = RESULTS) -> Dict[str, Any]:
     conformance = _conformance_totals(
         _load(results_dir / "conformance_summary.json")
     )
+    analysis = _load(results_dir / "analysis_report.json")
     return {
         "benchmarks": benchmarks,
         "gate": gate,
         "conformance": conformance,
+        "analysis": analysis,
     }
 
 
@@ -254,6 +277,49 @@ def render_markdown(report: Dict[str, Any]) -> str:
             out.append(
                 f"| {phase} | {p.get('calls', 0)} "
                 f"| {self_ns / 1e6:.2f} | {share * 100:.1f}% |"
+            )
+        out.append("")
+
+    compile_bench = report["benchmarks"].get("compile", {})
+    comp_analysis = compile_bench.get("analysis")
+    if comp_analysis:
+        out.append("## Schema-algebra ledger (register()-time analysis)")
+        out.append("")
+        aus = comp_analysis.get("analysis_us_per_schema")
+        out.append(
+            f"Mean analysis cost: **{aus:.0f} us/schema**; "
+            f"{comp_analysis.get('pruned_branches', 0)} branches pruned, "
+            f"{comp_analysis.get('folded_assertions', 0)} assertions folded "
+            f"across the preset + directed corpus."
+        )
+        out.append("")
+        out.append("| schema | analyze us | pruned | folded | dA-hat | dcircuits |")
+        out.append("|---|---:|---:|---:|---:|---:|")
+        for row in comp_analysis.get("schemas", []):
+            d = row.get("delta", {})
+            out.append(
+                f"| {row['name']} | {row.get('analysis_us', 0):.0f} "
+                f"| {row.get('pruned_branches', 0)} "
+                f"| {row.get('folded_assertions', 0)} "
+                f"| {d.get('a_hat', 0)} | {d.get('n_circuits', 0)} |"
+            )
+        out.append("")
+
+    analysis = report.get("analysis")
+    if analysis and analysis.get("endpoints"):
+        out.append("## Endpoint analysis posture (registry presets)")
+        out.append("")
+        out.append(
+            "| endpoint | normalized | pruned | folded | dedup | lint |"
+        )
+        out.append("|---|---|---:|---:|---:|---|")
+        for ep, p in sorted(analysis["endpoints"].items()):
+            out.append(
+                f"| {ep} | {'yes' if p.get('normalized') else 'no'} "
+                f"| {p.get('pruned_branches', 0)} "
+                f"| {p.get('folded_assertions', 0)} "
+                f"| {p.get('dedup_subgraphs', 0)} "
+                f"| {p.get('lint', '?')} |"
             )
         out.append("")
 

@@ -1,0 +1,44 @@
+"""Ahead-of-time schema algebra (DESIGN.md §15).
+
+Static-analysis passes that run between schema submission and tape
+build, applying the JSON-subschema line of work (PAPERS.md: *Type
+Safety with JSON Subschema*; *JSON Schema Inclusion through
+Refutational Normalization*) at ``register()`` time:
+
+- :mod:`.structhash` -- canonical serialization + structural hashing,
+  used for subgraph dedup across registry members;
+- :mod:`.sat` -- conservative satisfiability summaries (interval /
+  type-set / enum abstraction) that back every prune *proof*;
+- :mod:`.normalize` -- the canonicalizer/normalizer pass pipeline,
+  differentially verified against :class:`NaiveValidator`;
+- :mod:`.subsume` -- inclusion/equivalence prover between endpoint
+  versions (equivalence -> metadata-only hot swap);
+- :mod:`.unroll` -- per-schema ``unroll_depth`` sizing from the
+  compiled label graph's branching recursion bound;
+- :mod:`.lint_tape` -- post-build static checker for
+  LocationTape/LinkedTape invariants.
+
+Soundness contract: rewrites happen only on *proofs*; any pass that
+cannot prove its transform leaves the schema unchanged (unknown =>
+keep).  The whole pipeline is wrapped in a differential verdict check
+against the unmodified schema and reverts on any disagreement.
+"""
+
+from .normalize import AnalysisReport, analyze_schema
+from .structhash import structural_hash, subschema_hashes
+from .subsume import SubsumptionResult, compare
+from .unroll import recommend_unroll_depth
+from .lint_tape import TapeLintError, assert_tape, lint_tape
+
+__all__ = [
+    "AnalysisReport",
+    "analyze_schema",
+    "structural_hash",
+    "subschema_hashes",
+    "SubsumptionResult",
+    "compare",
+    "recommend_unroll_depth",
+    "TapeLintError",
+    "assert_tape",
+    "lint_tape",
+]

@@ -95,6 +95,7 @@ property edges); applicators under ``items``/``additionalProperties``/
 
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Set, Tuple
 
@@ -1257,7 +1258,14 @@ def build_tape(
     )
     root = b.new_loc()
     b.add_group(compiled.instructions, root)
-    return b.build()
+    tape = b.build()
+    if os.environ.get("REPRO_LINT_TAPES"):
+        # structural-invariant linter (DESIGN.md §15); lazy import --
+        # analysis sits above core in the layering
+        from ..analysis.lint_tape import assert_tape
+
+        assert_tape(tape, label="build_tape")
+    return tape
 
 
 def try_build_tape(

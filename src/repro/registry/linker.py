@@ -52,6 +52,7 @@ re-link path).
 
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
@@ -451,7 +452,7 @@ def link_tapes(
     if linked["prefix_loc"].size == 0:
         linked["prefix_loc"] = np.full(1, -1, np.int32)
 
-    return LinkedTape(
+    out = LinkedTape(
         members=tuple(names),
         loc_offsets=loc_off,
         prop_offsets=prop_off,
@@ -464,3 +465,10 @@ def link_tapes(
         member_n_circuits=np.array([s.n_circuits for s in segments], np.int32),
         **linked,
     )
+    if os.environ.get("REPRO_LINT_TAPES"):
+        # structural-invariant linter (DESIGN.md §15); lazy import --
+        # analysis sits above the linker in the layering
+        from ..analysis.lint_tape import assert_tape
+
+        assert_tape(out, label="link_tapes")
+    return out

@@ -31,11 +31,17 @@ that estate:
 from __future__ import annotations
 
 import copy
+import os
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from ..analysis.normalize import AnalysisReport, analyze_schema
+from ..analysis.subsume import compare as subsume_compare
+from ..analysis.unroll import recommend_unroll_depth
 
 from ..core import CompiledSchema, NaiveValidator, Validator, compile_schema
 from ..core.batch_executor import BatchValidator
@@ -72,11 +78,20 @@ __all__ = [
     "AdmitCounts",
     "LinkGroup",
     "RegistrationError",
+    "WidenedSwapWarning",
 ]
 
 
 class RegistrationError(RuntimeError):
     """A registration failed build/verify/link; the prior version serves."""
+
+
+class WidenedSwapWarning(UserWarning):
+    """A hot-swap candidate was *proven* to accept strictly more
+    instances than the serving version (DESIGN.md §15): traffic the old
+    schema rejected will start passing.  The swap proceeds -- widening
+    is often intentional -- but the posture is surfaced here, in
+    ``registry_swap_widened_total`` and in ``endpoint_stats()``."""
 
 
 @dataclass
@@ -130,6 +145,12 @@ class LinkGroup:
     tape: LinkedTape
     validator: BatchValidator
     member_index: Dict[str, int]  # endpoint -> group-local schema id
+    # endpoints whose segments are physically present in the linked tape.
+    # With ``dedup_links`` structurally identical members (equal canonical
+    # hash) share one representative segment, so this can be shorter than
+    # ``members``; ``member_index`` maps every endpoint to its (possibly
+    # shared) schema id.
+    linked_members: Tuple[str, ...] = ()
 
 
 @dataclass
@@ -154,6 +175,15 @@ class SchemaStats:
     # logical-applicator circuit facts (DESIGN.md §10)
     n_circuits: int = 0
     circ_depth: int = 0
+    # ahead-of-time schema-algebra facts (DESIGN.md §15): what the
+    # register()-time analysis pipeline proved and rewrote
+    analysis_seconds: float = 0.0
+    normalized: bool = False  # analysis changed the lowered schema
+    pruned_branches: int = 0  # proven-unsat branches removed pre-tape
+    folded_assertions: int = 0  # constants folded / bounds tightened / noops
+    dedup_subgraphs: int = 0  # subgraphs shared with other serving members
+    analysis_failure: str = ""  # analyzer bailed (original schema lowered)
+    subsumption: str = ""  # last swap verdict vs prior serving version
 
 
 @dataclass
@@ -167,6 +197,13 @@ class SchemaEntry:
     validator: Validator  # sequential oracle (modern-spec semantics)
     tape: Optional[LocationTape]  # None outside the structural subset
     stats: SchemaStats
+    # schema-algebra artifacts (DESIGN.md §15).  ``schema`` above keeps
+    # the schema exactly as submitted (the verbatim no-op check and the
+    # sequential oracle pin to it); ``canonical`` is the normalized form
+    # the tape was actually lowered from.
+    canonical: Any = None
+    canonical_hash: str = ""
+    analysis: Optional[AnalysisReport] = None
 
 
 class SchemaRegistry:
@@ -179,7 +216,7 @@ class SchemaRegistry:
         use_pallas: bool = False,
         layout: str = "csr",
         max_depth: int = 16,
-        unroll_depth: int = DEFAULT_UNROLL_DEPTH,
+        unroll_depth: Optional[int] = None,
         guard: GuardLimits = GuardLimits(),
         breaker: BreakerConfig = BreakerConfig(),
         fallback_max_steps: int = 500_000,
@@ -187,12 +224,22 @@ class SchemaRegistry:
         clock: Callable[[], float] = time.monotonic,
         metrics: Optional[MetricRegistry] = None,
         link_grouping: bool = True,
+        analysis: bool = True,
+        dedup_links: bool = True,
     ):
         self.engine = engine
         self.use_pallas = use_pallas
         self.layout = layout
         self.max_depth = max_depth
+        # $ref-unroll sizing (DESIGN.md §15): None = auto -- honor the
+        # REPRO_UNROLL_DEPTH env override, else size per schema from the
+        # analyzer's recursion-cycle bound; an explicit int pins every
+        # registration to that depth (legacy behavior).
         self.unroll_depth = unroll_depth
+        # ahead-of-time schema algebra (DESIGN.md §15): normalize/prune
+        # before lowering, prove swap subsumption, dedup linked segments
+        self.analysis = analysis
+        self.dedup_links = dedup_links
         # fault-containment knobs (DESIGN.md §11): admission guards,
         # bounded-fallback budget, and per-endpoint breaker config.  The
         # clock is injectable so breaker trips/recoveries test
@@ -218,6 +265,9 @@ class SchemaRegistry:
         )
         self._breakers: Dict[str, CircuitBreaker] = {}
         self._swap_failures: Dict[str, str] = {}
+        # endpoint -> subsumption verdict of its most recent hot-swap
+        # (equivalent / widened / narrowed / incomparable / unknown)
+        self._swap_verdicts: Dict[str, str] = {}
         self._entries: Dict[str, Dict[int, SchemaEntry]] = {}
         self._active: Dict[str, int] = {}  # endpoint -> serving version
         self._order: List[str] = []  # registration order = member order
@@ -275,6 +325,16 @@ class SchemaRegistry:
         the reason (:meth:`swap_failures`), and leaves the prior version
         serving -- a bad schema version never reaches traffic.
         ``verify="off"`` skips the differential probes.
+
+        With ``analysis=True`` (default) the schema-algebra pipeline
+        (DESIGN.md §15) runs first: the schema is normalized and proven-
+        unsat branches are pruned before lowering, and the candidate is
+        compared against the serving version.  A swap *proven*
+        equivalent is a metadata-only no-op -- the serving entry, its
+        linked segments and every jitted validator stay untouched
+        (generation does not move); a swap proven to widen the accepted
+        set proceeds but emits :class:`WidenedSwapWarning` and bumps
+        ``registry_swap_widened_total``.
         """
         if endpoint in self._active:
             current = self.get(endpoint)
@@ -285,14 +345,62 @@ class SchemaRegistry:
         # registrations against the served version
         schema = copy.deepcopy(schema)
         t_reg = time.perf_counter()
+        # -- ahead-of-time schema algebra (DESIGN.md §15) ---------------------
+        report: Optional[AnalysisReport] = None
+        lowered = schema
+        if self.analysis:
+            with _phase("analyze"):
+                report = analyze_schema(schema, verify=(verify != "off"))
+            lowered = report.normalized
+        # -- subsumption proof vs the serving version -------------------------
+        verdict = ""
+        if report is not None and endpoint in self._active:
+            prev = self.get(endpoint)
+            result = subsume_compare(
+                prev.canonical if prev.canonical is not None else prev.schema,
+                lowered,
+                old_hash=prev.canonical_hash or None,
+                new_hash=report.canonical_hash or None,
+            )
+            verdict = result.verdict
+            self._swap_verdicts[endpoint] = verdict
+            if verdict == "equivalent":
+                # metadata-only no-op: the candidate is proven to accept
+                # exactly the serving version's instance set, so the
+                # serving entry, its cached segments, every link group
+                # and every jit trace stay alive.  No version bump, no
+                # generation move, no relink.
+                prev.stats.subsumption = verdict
+                self.metrics.counter(
+                    "registry_swap_total",
+                    "registration swaps by result",
+                    result="equivalent_noop",
+                ).inc()
+                self._m_register_seconds.inc(time.perf_counter() - t_reg)
+                return prev
+            if verdict == "widened":
+                self.metrics.counter(
+                    "registry_swap_widened_total",
+                    "hot-swaps proven to accept strictly more instances",
+                    endpoint=endpoint,
+                ).inc()
+                warnings.warn(
+                    f"endpoint {endpoint!r}: replacement schema is proven "
+                    f"to accept strictly more instances than serving "
+                    f"version {prev.version} (witness: "
+                    f"{result.witnesses[:1]!r}); swap proceeds",
+                    WidenedSwapWarning,
+                    stacklevel=2,
+                )
         # -- build (no state mutated on failure) ------------------------------
         try:
             t0 = time.perf_counter()
-            compiled = compile_schema(schema)
+            compiled = compile_schema(lowered)
             validator = Validator(compiled, engine=self.engine)
             t_compile = time.perf_counter() - t0
             t0 = time.perf_counter()
-            tape, reason = try_build_tape(compiled, unroll_depth=self.unroll_depth)
+            unroll = self._resolve_unroll_depth(compiled)
+            tape, reason = try_build_tape(compiled, unroll_depth=unroll)
             t_tape = time.perf_counter() - t0
         except Exception as exc:
             raise self._swap_failed(endpoint, f"build: {type(exc).__name__}: {exc}")
@@ -328,6 +436,30 @@ class SchemaRegistry:
             stats.n_frontier = tape.n_frontier
             stats.n_circuits = tape.n_circuits
             stats.circ_depth = tape.max_circ_depth
+        if report is not None:
+            stats.analysis_seconds = report.seconds
+            stats.normalized = report.changed
+            stats.pruned_branches = report.pruned_branches
+            stats.folded_assertions = (
+                report.folded_assertions
+                + report.tightened_bounds
+                + report.removed_noops
+            )
+            stats.analysis_failure = report.failure or ""
+            # structural dedup posture: how many of this schema's
+            # canonical subgraphs already occur in another serving member
+            if report.subgraph_hashes:
+                mine = set(report.subgraph_hashes)
+                others: set = set()
+                for ep in self._order:
+                    if ep == endpoint:
+                        continue
+                    other = self.get(ep)
+                    if other.analysis is not None:
+                        others.update(other.analysis.subgraph_hashes)
+                report.dedup_subgraphs = len(mine & others)
+                stats.dedup_subgraphs = report.dedup_subgraphs
+        stats.subsumption = verdict
         versions = self._entries.setdefault(endpoint, {})
         version = self._next_version.get(endpoint, 0) + 1
         self._next_version[endpoint] = version
@@ -339,6 +471,9 @@ class SchemaRegistry:
             validator=validator,
             tape=tape,
             stats=stats,
+            canonical=lowered,
+            canonical_hash=report.canonical_hash if report is not None else "",
+            analysis=report,
         )
         versions[version] = entry
         self._active[endpoint] = version
@@ -369,6 +504,31 @@ class SchemaRegistry:
         """endpoint -> reason of its most recent *failed* registration
         (cleared by the next successful swap)."""
         return dict(self._swap_failures)
+
+    def swap_verdicts(self) -> Dict[str, str]:
+        """endpoint -> subsumption verdict of the most recent hot-swap
+        attempt against its then-serving version (``equivalent`` /
+        ``widened`` / ``narrowed`` / ``incomparable`` / ``unknown``).
+        First registrations have no verdict."""
+        return dict(self._swap_verdicts)
+
+    def _resolve_unroll_depth(self, compiled: CompiledSchema) -> int:
+        """Per-schema $ref-unroll budget (DESIGN.md §15).
+
+        Explicit constructor ``unroll_depth`` pins every registration;
+        otherwise the ``REPRO_UNROLL_DEPTH`` env var wins, and failing
+        that the analyzer sizes the depth from the schema's recursion
+        cycle shape under the unroll node budget.
+        """
+        if self.unroll_depth is not None:
+            return self.unroll_depth
+        env = os.environ.get("REPRO_UNROLL_DEPTH", "")
+        if env:
+            try:
+                return max(1, int(env))
+            except ValueError:
+                pass
+        return recommend_unroll_depth(compiled)
 
     @staticmethod
     def _synth_probes(schema: Any) -> List[Any]:
@@ -539,16 +699,35 @@ class SchemaRegistry:
             signature = tuple((m, self._active[m]) for m in members)
             g = self._group_cache.get(signature)
             if g is None:
+                # structural dedup (DESIGN.md §15): a member whose
+                # canonical hash matches an earlier member in the group
+                # shares that member's linked segment instead of adding
+                # a bit-identical copy -- the group tape carries one
+                # physical segment per distinct canonical schema and
+                # ``member_index`` routes every endpoint to its slot
+                reps: List[str] = []
+                rep_slot: Dict[str, int] = {}
+                member_index: Dict[str, int] = {}
+                for m in members:
+                    h = self.get(m).canonical_hash if self.dedup_links else ""
+                    if h and h in rep_slot:
+                        member_index[m] = rep_slot[h]
+                        continue
+                    slot = len(reps)
+                    reps.append(m)
+                    if h:
+                        rep_slot[h] = slot
+                    member_index[m] = slot
                 t0 = time.perf_counter()
                 with _span(
-                    "registry.relink", members=len(members), group=label
+                    "registry.relink", members=len(reps), group=label
                 ):
                     tape = link_tapes(
                         segments=[
                             self._segments[(m, self._active[m])]
-                            for m in members
+                            for m in reps
                         ],
-                        names=members,
+                        names=reps,
                     )
                     validator = BatchValidator(
                         tape,
@@ -564,7 +743,8 @@ class SchemaRegistry:
                     signature=signature,
                     tape=tape,
                     validator=validator,
-                    member_index={m: i for i, m in enumerate(members)},
+                    member_index=member_index,
+                    linked_members=tuple(reps),
                 )
                 self._m_relinks.inc()
                 self._m_relink_seconds.inc(time.perf_counter() - t0)
@@ -608,6 +788,8 @@ class SchemaRegistry:
             out[g.label] = {
                 "members": list(g.members),
                 "n_members": len(g.members),
+                "linked_members": list(g.linked_members),
+                "n_linked": len(g.linked_members),
                 "a_hat": int(g.tape.max_rows_per_loc),
                 "m_hat": int(g.tape.max_member_props),
                 "k": int(g.tape.max_hash_run),

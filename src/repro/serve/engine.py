@@ -295,6 +295,7 @@ class ServeEngine:
         shape, unroll budget/frontiers)."""
         out: Dict[str, Dict[str, Any]] = {}
         swap_failures = self.registry.swap_failures()
+        swap_verdicts = self.registry.swap_verdicts()
         for endpoint in self.registry.endpoints():
             entry = self.registry.get(endpoint)
             per: Dict[str, Any] = dict(
@@ -329,6 +330,15 @@ class ServeEngine:
                 0 if group is None else int(group.tape.max_loc_depth) + 1
             )
             per["last_swap_error"] = swap_failures.get(endpoint, "")
+            # schema-algebra posture (DESIGN.md §15): what register()-time
+            # analysis proved/rewrote for the serving version, plus the
+            # subsumption verdict of the most recent hot-swap attempt
+            per["analysis_normalized"] = entry.stats.normalized
+            per["pruned_branches"] = entry.stats.pruned_branches
+            per["folded_assertions"] = entry.stats.folded_assertions
+            per["dedup_subgraphs"] = entry.stats.dedup_subgraphs
+            per["analysis_failure"] = entry.stats.analysis_failure
+            per["last_swap_subsumption"] = swap_verdicts.get(endpoint, "")
             breaker = self.registry.breaker(endpoint)
             per["breaker_state"] = breaker.state
             per["breaker_trips"] = breaker.trips

@@ -1,0 +1,11 @@
+"""Shared test configuration.
+
+Arms the tape-invariant linter (DESIGN.md §15) for the whole suite:
+every ``build_tape``/``link_tapes`` call in any test asserts the full
+structural contract (CSR window coverage, psort integrity, circuit DAG
+shape, frontier wiring, linked offsets) before the tape is used.
+"""
+
+import os
+
+os.environ.setdefault("REPRO_LINT_TAPES", "1")

@@ -1,0 +1,186 @@
+"""Tape-invariant linter (DESIGN.md §15): clean tapes lint clean, and
+each class of deliberate corruption is caught.
+
+The whole tier-1 suite additionally runs with ``REPRO_LINT_TAPES=1``
+(tests/conftest.py), so every ``build_tape``/``link_tapes`` call in any
+test asserts these invariants implicitly; this file is the directed
+positive/negative coverage.
+"""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.analysis.lint_tape import TapeLintError, assert_tape, lint_tape
+from repro.core import compile_schema
+from repro.core.tape import build_tape
+from repro.registry.linker import link_tapes
+from repro.registry.presets import GATEWAY_SCHEMAS
+from repro.registry.registry import SchemaRegistry
+
+RECURSIVE = {
+    "$defs": {
+        "node": {
+            "type": "object",
+            "properties": {"v": {"type": "integer"}, "next": {"$ref": "#/$defs/node"}},
+            "required": ["v"],
+        }
+    },
+    "$ref": "#/$defs/node",
+}
+
+
+def _tape(schema, **kw):
+    return build_tape(compile_schema(schema), **kw)
+
+
+# ---------------------------------------------------------------------------
+# clean tapes lint clean
+# ---------------------------------------------------------------------------
+
+
+def test_presets_and_groups_lint_clean():
+    reg = SchemaRegistry(use_pallas=False)
+    for name, schema in GATEWAY_SCHEMAS.items():
+        reg.register(name, schema)
+    for name in GATEWAY_SCHEMAS:
+        entry = reg.get(name)
+        if entry.tape is not None:
+            assert lint_tape(entry.tape) == [], name
+    for g in reg.groups():
+        assert lint_tape(g.tape) == [], g.label
+    legacy = reg.linked_tape()
+    if legacy is not None:
+        assert lint_tape(legacy) == []
+
+
+def test_recursive_frontier_tape_lints_clean():
+    tape = _tape(RECURSIVE, unroll_depth=2)
+    assert tape.n_frontier >= 1
+    assert lint_tape(tape) == []
+    linked = link_tapes([tape, _tape({"type": "object"})], names=["rec", "flat"])
+    assert lint_tape(linked) == []
+
+
+def test_assert_tape_raises_with_label():
+    tape = _tape({"type": "object", "properties": {"a": {"type": "integer"}}})
+    assert_tape(tape, label="ok-case")  # no raise
+    bad = copy.deepcopy(tape)
+    bad.loc_asrt_len[0] += 1
+    with pytest.raises(TapeLintError) as ei:
+        assert_tape(bad, label="bad-case")
+    assert "bad-case" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# each corruption class is caught
+# ---------------------------------------------------------------------------
+
+
+def _charge_tape():
+    # charge has circuits (oneOf tagged union) and several locations
+    return _tape(GATEWAY_SCHEMAS["charge"])
+
+
+def test_catches_csr_window_shift():
+    bad = copy.deepcopy(_charge_tape())
+    assert bad.n_locations >= 3
+    bad.loc_asrt_start[2] += 1
+    assert any("csr" in p for p in lint_tape(bad))
+
+
+def test_catches_psort_order_break():
+    bad = copy.deepcopy(_charge_tape())
+    assert len(bad.psort_hash) >= 2
+    # swap two adjacent psort lanes without touching the originals:
+    # breaks either the lex-sort or the permutation/run bookkeeping
+    for f in ("psort_hash", "psort_owner", "psort_orig_row"):
+        arr = getattr(bad, f)
+        arr[0], arr[1] = arr[1].copy(), arr[0].copy()
+    assert lint_tape(bad) != []
+
+
+def test_catches_psort_not_a_permutation():
+    bad = copy.deepcopy(_charge_tape())
+    bad.psort_orig_row[0] = bad.psort_orig_row[1]
+    assert any("psort" in p for p in lint_tape(bad))
+
+
+def test_catches_edge_into_frontier():
+    tape = _tape(RECURSIVE, unroll_depth=2)
+    frontier = np.flatnonzero(tape.loc_frontier)
+    assert frontier.size >= 1
+    bad = copy.deepcopy(tape)
+    real = np.flatnonzero(bad.prop_owner >= 0)
+    # retarget a property transition at a frontier location
+    row = int(real[0])
+    bad.prop_child_loc[row] = int(frontier[0])
+    bad.psort_child_loc[np.flatnonzero(bad.psort_orig_row == row)[0]] = int(
+        frontier[0]
+    )
+    assert any("frontier" in p for p in lint_tape(bad))
+
+
+def test_catches_backward_edge():
+    bad = copy.deepcopy(_charge_tape())
+    real = np.flatnonzero((bad.prop_owner >= 0) & (bad.prop_child_loc >= 0))
+    if real.size == 0:
+        pytest.skip("no child transitions in this tape")
+    row = int(real[0])
+    bad.prop_child_loc[row] = 0  # child must be > owner; root never is
+    bad.psort_child_loc[np.flatnonzero(bad.psort_orig_row == row)[0]] = 0
+    assert lint_tape(bad) != []
+
+
+def test_catches_circuit_level_break():
+    bad = copy.deepcopy(_charge_tape())
+    assert bad.n_circuits >= 1
+    bad.circ_level[0] += 1
+    assert any("circ" in p for p in lint_tape(bad))
+
+
+def test_catches_circuit_parent_order_break():
+    bad = copy.deepcopy(_charge_tape())
+    if bad.n_circuits < 2:
+        pytest.skip("need >=2 circuits")
+    bad.circ_parent[0] = bad.n_circuits - 1  # parent must come first
+    assert any("circ" in p for p in lint_tape(bad))
+
+
+def test_catches_linked_offset_inconsistency():
+    tapes = [
+        _tape({"type": "object", "properties": {"a": {"type": "integer"}}}),
+        _tape({"type": "object", "properties": {"b": {"type": "string"}}}),
+    ]
+    linked = link_tapes(tapes, names=["m0", "m1"])
+    assert lint_tape(linked) == []
+    bad = copy.deepcopy(linked)
+    bad.loc_offsets[1] += 1
+    assert any("linked" in p or "offset" in p for p in lint_tape(bad))
+    bad2 = copy.deepcopy(linked)
+    bad2.member_horizons[0] += 1
+    assert lint_tape(bad2) != []
+
+
+def test_catches_required_mask_drift():
+    tape = _tape(
+        {
+            "type": "object",
+            "required": ["a"],
+            "properties": {"a": {"type": "integer"}},
+        }
+    )
+    bad = copy.deepcopy(tape)
+    owners = np.flatnonzero(bad.loc_required_mask != 0)
+    assert owners.size >= 1
+    bad.loc_required_mask[int(owners[0])] |= 1 << 30  # slot no row backs
+    assert any("required" in p for p in lint_tape(bad))
+
+
+def test_cli_clean_on_presets(capsys):
+    from repro.analysis.lint_tape import main
+
+    assert main(["--presets", "-q"]) == 0
+    out = capsys.readouterr().out
+    assert "clean" in out

@@ -1,0 +1,475 @@
+"""Differential suite for the ahead-of-time schema algebra (DESIGN.md §15).
+
+Soundness contract under test: every rewrite the analyzer performs --
+constant folding, allOf flattening, bound tightening, branch pruning --
+must preserve the *verdict* of every instance, as judged by the naive
+reference interpreter.  Covered by:
+
+- seeded random schema/document fuzzing (original vs normalized)
+- the vendored conformance corpus re-run against normalized schemas
+- directed prune cases asserting the tape actually shrinks
+- directed subsumption verdicts (equivalent / widened / narrowed /
+  incomparable) plus the registry's swap semantics built on them
+  (equivalence => metadata-only no-op, widening => warning + counter)
+- structural dedup of linked segments and per-schema unroll sizing
+"""
+
+import json
+import os
+import random
+import warnings
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import analyze_schema, compare, structural_hash
+from repro.analysis.unroll import recommend_unroll_depth
+from repro.core import NaiveValidator, compile_schema
+from repro.core.tape import try_build_tape
+from repro.registry.registry import SchemaRegistry, WidenedSwapWarning
+
+CORPUS = Path(__file__).parent / "conformance"
+
+# ---------------------------------------------------------------------------
+# seeded random schema / document generators
+# ---------------------------------------------------------------------------
+
+_KEYS = ["a", "b", "c", "kind", "n", "s"]
+
+
+def _rand_schema(rng: random.Random, depth: int = 0):
+    """Small random schema biased toward the keywords the analyzer
+    rewrites (bounds, enums, logical applicators, duplicates)."""
+    roll = rng.random()
+    if depth >= 3 or roll < 0.15:
+        return rng.choice(
+            [
+                {"type": "integer", "minimum": rng.randint(-5, 5)},
+                {"type": "integer", "minimum": 4, "maximum": rng.randint(0, 8)},
+                {"type": "string", "minLength": rng.randint(0, 3)},
+                {"type": "string", "minLength": 5, "maxLength": rng.randint(0, 9)},
+                {"enum": [1, 2, "x"]},
+                {"const": rng.choice([1, "x", True, None])},
+                {"type": rng.choice(["number", "boolean", "null", "array"])},
+                True,
+                False,
+            ]
+        )
+    if roll < 0.45:
+        props = {
+            k: _rand_schema(rng, depth + 1)
+            for k in rng.sample(_KEYS, rng.randint(1, 3))
+        }
+        out = {"type": "object", "properties": props}
+        if rng.random() < 0.5:
+            out["required"] = rng.sample(list(props), rng.randint(1, len(props)))
+        if rng.random() < 0.2:
+            out["additionalProperties"] = False
+        if rng.random() < 0.2:
+            out["minProperties"] = rng.randint(0, 2)
+        return out
+    kw = rng.choice(["allOf", "anyOf", "oneOf", "not", "if"])
+    if kw == "not":
+        return {"not": _rand_schema(rng, depth + 1)}
+    if kw == "if":
+        return {
+            "if": _rand_schema(rng, depth + 1),
+            "then": _rand_schema(rng, depth + 1),
+        }
+    return {kw: [_rand_schema(rng, depth + 1) for _ in range(rng.randint(1, 3))]}
+
+
+def _rand_doc(rng: random.Random, depth: int = 0):
+    roll = rng.random()
+    if depth >= 2 or roll < 0.5:
+        return rng.choice(
+            [None, True, False, 0, 1, 2, 4, 5, -3, 1.5, "", "x", "hello", "abcdef"]
+        )
+    if roll < 0.8:
+        return {
+            k: _rand_doc(rng, depth + 1)
+            for k in rng.sample(_KEYS, rng.randint(0, 4))
+        }
+    return [_rand_doc(rng, depth + 1) for _ in range(rng.randint(0, 3))]
+
+
+def test_fuzz_normalize_preserves_verdicts():
+    rng = random.Random(0xB1A2E)
+    checked = 0
+    for _ in range(150):
+        schema = _rand_schema(rng)
+        report = analyze_schema(schema)
+        try:
+            naive_orig = NaiveValidator(schema)
+            naive_norm = NaiveValidator(report.normalized)
+        except Exception:
+            continue
+        for _ in range(20):
+            doc = _rand_doc(rng)
+            try:
+                want = naive_orig.is_valid(doc)
+            except Exception:
+                continue
+            got = naive_norm.is_valid(doc)
+            assert got == want, (
+                f"verdict drift on {doc!r}:\n  original   {schema!r}\n"
+                f"  normalized {report.normalized!r}"
+            )
+            checked += 1
+    assert checked > 1000  # the fuzz loop must actually exercise pairs
+
+
+def test_fuzz_normalized_compiled_engine_agrees():
+    """The compiled (codegen) engine over the *normalized* schema must
+    match the naive interpreter over the *original* -- the end-to-end
+    contract the registry's smoke verifier enforces at register()."""
+    from repro.core import Validator
+
+    rng = random.Random(0xC0FFEE)
+    for _ in range(40):
+        schema = _rand_schema(rng)
+        report = analyze_schema(schema)
+        try:
+            naive = NaiveValidator(schema)
+            compiled = Validator(compile_schema(report.normalized), engine="codegen")
+        except Exception:
+            continue
+        for _ in range(10):
+            doc = _rand_doc(rng)
+            try:
+                want = naive.is_valid(doc)
+                got = compiled.is_valid(doc)
+            except Exception:
+                continue
+            assert got == want, (doc, schema, report.normalized)
+
+
+def test_conformance_corpus_survives_normalization():
+    """Re-run the vendored corpus with every schema normalized: the
+    expected verdicts must hold exactly."""
+    cases = 0
+    for path in sorted(CORPUS.glob("*.json")):
+        for group in json.loads(path.read_text()):
+            schema = group["schema"]
+            report = analyze_schema(schema)
+            naive = NaiveValidator(report.normalized)
+            for test in group["tests"]:
+                try:
+                    got = naive.is_valid(test["data"])
+                except Exception:
+                    continue  # outside the naive envelope either way
+                assert got == test["valid"], (
+                    f"{path.name}: {group['description']} / "
+                    f"{test['description']}: normalized verdict {got}, "
+                    f"expected {test['valid']}\n  normalized: "
+                    f"{report.normalized!r}"
+                )
+                cases += 1
+    assert cases >= 90
+
+
+# ---------------------------------------------------------------------------
+# directed pruning: proofs shrink the tape
+# ---------------------------------------------------------------------------
+
+
+def test_prune_dead_branches_shrinks_tape():
+    schema = {
+        "type": "object",
+        "required": ["kind"],
+        "properties": {"kind": {"enum": ["a", "b"]}},
+        "anyOf": [
+            {"properties": {"kind": {"const": "a"}}, "required": ["kind"]},
+            {"properties": {"kind": {"const": "b"}}, "required": ["kind"]},
+            {"type": "string", "minLength": 8, "maxLength": 2},
+            {"type": "integer", "minimum": 10, "maximum": 3},
+        ],
+    }
+    report = analyze_schema(schema)
+    assert report.verified and report.pruned_branches >= 2
+    pre, _ = try_build_tape(compile_schema(schema))
+    post, _ = try_build_tape(compile_schema(report.normalized))
+    assert pre is not None and post is not None
+    assert post.max_rows_per_loc < pre.max_rows_per_loc
+    assert post.n_assertions < pre.n_assertions
+    # verdicts unchanged on both sides of every pruned boundary
+    naive = NaiveValidator(schema)
+    post_naive = NaiveValidator(report.normalized)
+    for doc in [{"kind": "a"}, {"kind": "b"}, {"kind": "c"}, {}, "xx", 5, 11]:
+        assert naive.is_valid(doc) == post_naive.is_valid(doc), doc
+
+
+def test_unsat_schema_folds_to_false():
+    report = analyze_schema(
+        {"type": "integer", "minimum": 10, "maximum": 3}
+    )
+    assert report.normalized is False
+    report = analyze_schema(
+        {"allOf": [{"const": 1}, {"const": 2}]}
+    )
+    assert report.normalized is False
+
+
+def test_unknown_keywords_are_kept():
+    """unknown => keep: schemas the analyzer cannot model pass through
+    byte-identical (no counters, no rewrite)."""
+    for schema in (
+        {"$dynamicRef": "#x"},
+        {"$ref": "#/$defs/a/allOf/0", "$defs": {"a": {"allOf": [{}]}}},
+        {"unevaluatedProperties": False, "anyOf": [True, {"type": "object"}]},
+    ):
+        report = analyze_schema(schema)
+        assert report.normalized == schema
+        assert report.pruned_branches == 0
+
+
+# ---------------------------------------------------------------------------
+# subsumption verdicts
+# ---------------------------------------------------------------------------
+
+BASE = {
+    "type": "object",
+    "required": ["a"],
+    "properties": {"a": {"type": "integer", "minimum": 0, "maximum": 10}},
+}
+
+
+def _with_bounds(lo, hi):
+    s = json.loads(json.dumps(BASE))
+    s["properties"]["a"]["minimum"] = lo
+    s["properties"]["a"]["maximum"] = hi
+    return s
+
+
+def test_subsumption_lattice():
+    assert compare(BASE, json.loads(json.dumps(BASE))).verdict == "equivalent"
+    # annotation-only and key-order changes hash equal -> equivalent
+    ann = dict(BASE, title="same", description="prose")
+    assert structural_hash(ann) == structural_hash(BASE)
+    assert compare(BASE, ann).verdict == "equivalent"
+    assert compare(BASE, _with_bounds(-5, 10)).verdict == "widened"
+    assert compare(BASE, _with_bounds(2, 10)).verdict == "narrowed"
+    assert compare(_with_bounds(0, 5), _with_bounds(2, 10)).verdict == "incomparable"
+
+
+def test_subsumption_unknown_on_unmodeled_keywords():
+    old = {"type": "string", "pattern": "^a+$"}
+    new = {"type": "string", "pattern": "^a*$"}
+    assert compare(old, new).verdict in ("unknown", "widened")
+
+
+# ---------------------------------------------------------------------------
+# registry swap semantics
+# ---------------------------------------------------------------------------
+
+
+def test_equivalent_swap_is_metadata_only_noop():
+    reg = SchemaRegistry(use_pallas=False)
+    e1 = reg.register("ep", BASE)
+    gen = reg.generation
+    group1 = reg.group_of("ep")
+    validator1 = None if group1 is None else group1.validator
+    # reordered keys + added prose: proven equivalent
+    variant = {
+        "properties": {"a": {"maximum": 10, "minimum": 0, "type": "integer"}},
+        "required": ["a"],
+        "type": "object",
+        "title": "same shape",
+    }
+    e2 = reg.register("ep", variant)
+    assert e2 is e1  # the serving entry, not a new version
+    assert reg.generation == gen  # no relink, no jit discard
+    assert reg.swap_verdicts()["ep"] == "equivalent"
+    group2 = reg.group_of("ep")
+    assert group2 is group1  # group object survived
+    if validator1 is not None:
+        assert group2.validator is validator1
+
+
+def test_widened_swap_warns_and_counts():
+    reg = SchemaRegistry(use_pallas=False)
+    reg.register("ep", _with_bounds(0, 10))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        e2 = reg.register("ep", _with_bounds(-5, 10))
+    assert any(issubclass(w.category, WidenedSwapWarning) for w in caught)
+    assert e2.version == 2  # the swap itself proceeds
+    assert reg.swap_verdicts()["ep"] == "widened"
+    assert e2.stats.subsumption == "widened"
+    counter = reg.metrics.counter(
+        "registry_swap_widened_total",
+        "hot-swaps proven to accept strictly more instances",
+        endpoint="ep",
+    )
+    assert counter.value >= 1
+
+
+def test_narrowed_swap_proceeds_silently():
+    reg = SchemaRegistry(use_pallas=False)
+    reg.register("ep", _with_bounds(0, 10))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        e2 = reg.register("ep", _with_bounds(2, 10))
+    assert not any(issubclass(w.category, WidenedSwapWarning) for w in caught)
+    assert e2.version == 2
+    assert reg.swap_verdicts()["ep"] == "narrowed"
+
+
+def test_analysis_off_pins_legacy_behavior():
+    reg = SchemaRegistry(use_pallas=False, analysis=False)
+    e1 = reg.register("ep", BASE)
+    gen = reg.generation
+    e2 = reg.register("ep", dict(BASE, title="not a verbatim match"))
+    assert e2.version == e1.version + 1  # no proof machinery, real swap
+    assert reg.generation > gen
+    assert reg.swap_verdicts() == {}
+
+
+# ---------------------------------------------------------------------------
+# structural dedup of linked segments
+# ---------------------------------------------------------------------------
+
+
+def test_linked_segment_dedup():
+    reg = SchemaRegistry(use_pallas=False)
+    a = {"type": "object", "properties": {"x": {"type": "string"}}, "required": ["x"]}
+    b = {
+        "required": ["x"],
+        "properties": {"x": {"type": "string"}},
+        "type": "object",
+        "description": "same shape, different prose",
+    }
+    reg.register("dup_a", a)
+    entry_b = reg.register("dup_b", b)
+    assert entry_b.stats.dedup_subgraphs >= 1
+    (group,) = reg.groups()
+    assert group.members == ("dup_a", "dup_b")
+    assert group.linked_members == ("dup_a",)  # one physical segment
+    assert group.member_index == {"dup_a": 0, "dup_b": 0}
+    # both endpoints validate correctly through the shared segment
+    verdicts, counts = reg.admit_mixed(
+        [{"x": "hi"}, {"x": "yo"}, {}, {"x": 1}],
+        ["dup_a", "dup_b", "dup_b", "dup_b"],
+    )
+    assert verdicts == [True, True, False, False]
+    assert counts.batch_validated == 4
+    reg2 = SchemaRegistry(use_pallas=False, dedup_links=False)
+    reg2.register("dup_a", a)
+    reg2.register("dup_b", b)
+    (group2,) = reg2.groups()
+    assert group2.linked_members == ("dup_a", "dup_b")  # opt-out keeps both
+
+
+def test_dedup_does_not_merge_distinct_schemas():
+    reg = SchemaRegistry(use_pallas=False)
+    reg.register("p", {"type": "object", "properties": {"x": {"type": "string"}}})
+    reg.register(
+        "q", {"type": "object", "properties": {"x": {"type": "string", "minLength": 2}}}
+    )
+    for g in reg.groups():
+        assert g.linked_members == g.members
+
+
+# ---------------------------------------------------------------------------
+# unroll sizing
+# ---------------------------------------------------------------------------
+
+RECURSIVE = {
+    "$defs": {
+        "node": {
+            "type": "object",
+            "properties": {"v": {"type": "integer"}, "next": {"$ref": "#/$defs/node"}},
+            "required": ["v"],
+        }
+    },
+    "$ref": "#/$defs/node",
+}
+
+
+def test_unroll_recommendation_and_overrides(monkeypatch):
+    compiled = compile_schema(RECURSIVE)
+    rec = recommend_unroll_depth(compiled)
+    assert rec >= 1
+    # flat schema: recommendation is the default
+    flat = compile_schema({"type": "object", "properties": {"a": {"type": "integer"}}})
+    from repro.core.tape import DEFAULT_UNROLL_DEPTH
+
+    assert recommend_unroll_depth(flat) == DEFAULT_UNROLL_DEPTH
+
+    # auto mode picks the recommendation
+    reg = SchemaRegistry(use_pallas=False)
+    entry = reg.register("rec", RECURSIVE)
+    assert entry.stats.unroll_depth == rec
+
+    # env override wins over the recommendation
+    monkeypatch.setenv("REPRO_UNROLL_DEPTH", "2")
+    reg2 = SchemaRegistry(use_pallas=False)
+    entry2 = reg2.register("rec", RECURSIVE)
+    assert entry2.stats.unroll_depth == 2
+    monkeypatch.delenv("REPRO_UNROLL_DEPTH")
+
+    # explicit constructor kwarg pins hardest
+    reg3 = SchemaRegistry(use_pallas=False, unroll_depth=3)
+    entry3 = reg3.register("rec", RECURSIVE)
+    assert entry3.stats.unroll_depth == 3
+
+
+# ---------------------------------------------------------------------------
+# posture surfaces
+# ---------------------------------------------------------------------------
+
+
+def test_endpoint_stats_surfaces_analysis_posture():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.serve.engine import ServeConfig, ServeEngine
+
+    cfg = get_config("granite-3-8b").reduced()
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    eng = ServeEngine(
+        cfg, params, ServeConfig(batch_slots=2, max_len=64, default_max_tokens=4)
+    )
+    eng.register_endpoint(
+        "ep",
+        {
+            "type": "object",
+            "required": ["a"],
+            "properties": {"a": {"type": "integer", "minimum": 0}},
+            "anyOf": [{"type": "object"}, {"type": "string", "minLength": 9, "maxLength": 1}],
+        },
+    )
+    eng.register_endpoint(
+        "ep",
+        {
+            "type": "object",
+            "required": ["a"],
+            "properties": {"a": {"type": "integer", "minimum": -1}},
+        },
+    )
+    per = eng.endpoint_stats()["ep"]
+    assert per["analysis_normalized"] is True or per["pruned_branches"] >= 0
+    assert "folded_assertions" in per and "dedup_subgraphs" in per
+    assert per["last_swap_subsumption"] in (
+        "widened",
+        "unknown",
+        "incomparable",
+        "narrowed",
+        "equivalent",
+    )
+
+
+def test_analysis_report_builds_clean():
+    from repro.analysis.report import build_report
+
+    report = build_report()
+    assert report["lint_failures"] == []
+    assert set(report["endpoints"]) == {
+        "chat",
+        "complete",
+        "embed",
+        "moderate",
+        "charge",
+    }
+    assert report["totals"]["folded_assertions"] >= 1
